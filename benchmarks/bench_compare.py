@@ -1,0 +1,47 @@
+"""Table IV reproduction: state-of-the-art comparison (IPA / UE-CGRA /
+RipTide vs STRELA), using our simulated STRELA numbers next to the paper's
+published values for every system."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import paper_data as PD
+from benchmarks import bench_multishot, bench_oneshot
+
+
+def run() -> List[dict]:
+    ours_one = {r["kernel"]: r for r in bench_oneshot.run()}
+    ours_multi = {r["kernel"]: r for r in bench_multishot.run()}
+    rows = []
+    for work, metrics in PD.TABLE_IV.items():
+        for bench, (perf, power, eff) in metrics.items():
+            row = {"work": work, "bench": bench, "perf_mops_paper": perf,
+                   "power_mw_paper": power, "eff_paper": eff}
+            if work == "STRELA":
+                ours = ours_one.get(bench) or ours_multi.get(bench)
+                if ours:
+                    row.update(perf_mops_ours=ours["perf_mops"],
+                               power_mw_ours=ours["cgra_mw"],
+                               eff_ours=ours["eff_mops_mw"])
+            rows.append(row)
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print(f"{'work':10s} {'bench':7s} {'MOPs(paper)':>12s} {'MOPs(ours)':>11s} "
+          f"{'mW(p)':>6s} {'mW(o)':>6s} {'eff(p)':>7s} {'eff(o)':>7s}")
+    for r in rows:
+        ours_p = f"{r.get('perf_mops_ours', float('nan')):11.1f}" \
+            if "perf_mops_ours" in r else "          -"
+        ours_w = f"{r.get('power_mw_ours', float('nan')):6.2f}" \
+            if "power_mw_ours" in r else "     -"
+        ours_e = f"{r.get('eff_ours', float('nan')):7.1f}" \
+            if "eff_ours" in r else "      -"
+        print(f"{r['work']:10s} {r['bench']:7s} {r['perf_mops_paper']:12.1f} "
+              f"{ours_p} {r['power_mw_paper']:6.2f} {ours_w} "
+              f"{r['eff_paper']:7.1f} {ours_e}")
+
+
+if __name__ == "__main__":
+    main()

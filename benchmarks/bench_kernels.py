@@ -1,0 +1,90 @@
+"""Pallas kernel micro-benchmarks (TPU adaptation layer).
+
+CPU wall-times of the jitted XLA reference vs the interpret-mode Pallas
+kernel are *correctness* artifacts (interpret mode is a Python interpreter,
+not a performance path); the TPU-side expectation is the analytic roofline
+estimate printed per kernel (bytes-bound streaming for fabric_stream,
+MXU-bound for stream_matmul).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kernels_lib as K
+from repro.kernels import ops, ref
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, out)
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def run() -> List[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # fabric_stream on the fft butterfly (one-shot engine)
+    g = K.fft_butterfly()
+    n = 1 << 16
+    ins = {k: jnp.asarray(rng.integers(-4096, 4096, n).astype(np.int32))
+           for k in ("ar", "ai", "br", "bi")}
+    ref_fn = jax.jit(lambda d: ref.eval_dfg_elementwise(g, d))
+    us_ref = _time(ref_fn, ins)
+    stream_bytes = 8 * n * 4                       # 4 in + 4 out streams
+    rows.append({"kernel": "fabric_stream(fft)", "n": n,
+                 "us_xla_cpu": us_ref,
+                 "tpu_roofline_us": stream_bytes / HBM_BW * 1e6,
+                 "note": "bandwidth-bound streaming; one HBM round-trip"})
+
+    # stream_matmul (multi-shot engine)
+    m, k_, n2 = 512, 512, 512
+    a = jnp.asarray(rng.standard_normal((m, k_)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k_, n2)), jnp.float32)
+    us_ref = _time(jax.jit(ref.matmul), a, b)
+    flops = 2 * m * k_ * n2
+    rows.append({"kernel": "stream_matmul", "n": m,
+                 "us_xla_cpu": us_ref,
+                 "tpu_roofline_us": flops / PEAK_FLOPS * 1e6,
+                 "note": "MXU-bound (bf16 would halve bytes)"})
+
+    # stream_conv2d
+    img = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    kern = jnp.asarray(rng.standard_normal((3, 3)), jnp.float32)
+    us_ref = _time(jax.jit(ref.conv2d_3x3), img, kern)
+    rows.append({"kernel": "stream_conv2d", "n": 256,
+                 "us_xla_cpu": us_ref,
+                 "tpu_roofline_us": (2 * 256 * 256 * 4) / HBM_BW * 1e6,
+                 "note": "3 taps fused: single image round-trip"})
+
+    # flash attention
+    h, s, d = 8, 1024, 64
+    q = jnp.asarray(rng.standard_normal((h, s, d)), jnp.float32)
+    us_ref = _time(jax.jit(lambda q: ref.flash_attention(q, q, q)), q)
+    flops = 4 * h * s * s * d
+    rows.append({"kernel": "flash_attention", "n": s,
+                 "us_xla_cpu": us_ref,
+                 "tpu_roofline_us": flops / PEAK_FLOPS * 1e6,
+                 "note": "compute-bound when fused (no SxS HBM traffic)"})
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(f"{r['kernel']:22s} n={r['n']:6d} xla_cpu={r['us_xla_cpu']:9.1f}us "
+              f"tpu_roofline={r['tpu_roofline_us']:8.2f}us  {r['note']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Table I reproduction: one-shot kernels (fft, relu, dither, find2min).
+
+For each kernel: map onto the 4x4 fabric (frozen 'manual' mapping), run the
+cycle-level elastic simulation on 1024 input elements with the paper's
+stream layout, and derive performance/power/energy metrics from the fitted
+models. Paper values are printed side-by-side with relative errors.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import paper_data as PD
+from repro.core.dfg import DFG
+from repro.core.elastic_sim import SimResult, simulate
+from repro.core.energy import (CPU_MW, SOC_CPU_MW, PowerModel,
+                               features_from_sim)
+from repro.core.paper_mappings import paper_mapping
+from repro.core.soc import ONESHOT_PREAMBLE, cpu_cycles, profiles
+
+TOTAL_INPUTS = 1024
+
+
+def _inputs_for(name: str, rng) -> Dict[str, np.ndarray]:
+    if name == "fft":
+        return {k: rng.integers(-4096, 4096, 256).astype(np.int32)
+                for k in ("ar", "ai", "br", "bi")}
+    if name == "relu_x3":
+        x = rng.integers(-128, 128, 1023).astype(np.int32)
+        return {"x@0": x[0::3], "x@1": x[1::3], "x@2": x[2::3]}
+    if name == "dither_c2":
+        x = rng.integers(0, 256, 1024).astype(np.int32)
+        return {"x@0": x[0::2], "x@1": x[1::2]}
+    if name in ("find2min", "find2min_brmg"):
+        return {"x": rng.integers(0, 100000, 1024).astype(np.int32)}
+    raise KeyError(name)
+
+
+# mapping-name -> paper Table I row.  find2min appears twice: our mux-based
+# mapping (II=2) and the paper-faithful Branch/Merge formulation (II=3,
+# Fig. 5 'BR/MG'); both beat the paper's 7175 cycles — see EXPERIMENTS.md
+# §Paper-validation for the deviation analysis.
+_PAPER_ROW = {"fft": "fft", "relu_x3": "relu", "dither_c2": "dither",
+              "find2min": "find2min", "find2min_brmg": "find2min"}
+# paper op counts per element (Sec. VII-B conventions)
+_OPS = {"fft": 2560, "relu_x3": 2048, "dither_c2": 5120, "find2min": 9216,
+        "find2min_brmg": 9216}
+
+
+def run(power_model: PowerModel = None) -> List[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    sims: Dict[str, tuple] = {}
+    for name, paper_key in _PAPER_ROW.items():
+        m = paper_mapping(name)
+        sim = simulate(m, _inputs_for(name, rng))
+        sims[name] = (m, sim)
+
+    # fit the power model across one-shot + multi-shot samples happens in
+    # run.py; here accept a pre-fitted model (or fit on our 4 samples only)
+    pm = power_model
+    if pm is None:
+        pm = PowerModel()
+        samples = []
+        for name, paper_key in _PAPER_ROW.items():
+            m, sim = sims[name]
+            t1 = PD.TABLE_I[paper_key]
+            samples.append(features_from_sim(m, sim, 1.0, t1[5], t1[11]))
+        pm.fit(samples)
+
+    for name, paper_key in _PAPER_ROW.items():
+        m, sim = sims[name]
+        t1 = PD.TABLE_I[paper_key]
+        n_ops = _OPS[name]
+        ops_measured = sum(sim.fu_firings.values())
+        perf_mops = n_ops / (sim.cycles / PD.CLOCK_MHZ)  # ops per us = MOPs
+        feats = features_from_sim(m, sim, 1.0, t1[5], t1[11])
+        cgra_mw = pm.cgra_mw(feats)
+        soc_mw = pm.soc_mw(feats)
+        eff = perf_mops / cgra_mw
+        prof = profiles()[paper_key]
+        cpu_cyc = cpu_cycles(prof)
+        speedup = cpu_cyc / (sim.cycles + m.config_cycles() + ONESHOT_PREAMBLE)
+        esave_cpu = (cpu_cyc * CPU_MW) / (sim.cycles * cgra_mw)
+        soc_cpu_mw = SOC_CPU_MW
+        esave_soc = (cpu_cyc * soc_cpu_mw) / (sim.cycles * soc_mw)
+        rows.append({
+            "kernel": name, "paper_kernel": paper_key,
+            "config_cycles": m.config_cycles(),
+            "config_cycles_paper": t1[0],
+            "exec_cycles": sim.cycles, "exec_cycles_paper": t1[1],
+            "cycles_err": (sim.cycles - t1[1]) / t1[1],
+            "n_ops": n_ops, "ops_measured": ops_measured,
+            "outputs_per_cycle": sim.outputs_per_cycle(),
+            "outputs_per_cycle_paper": t1[3],
+            "perf_mops": perf_mops, "perf_mops_paper": t1[4],
+            "cgra_mw": cgra_mw, "cgra_mw_paper": t1[5],
+            "eff_mops_mw": eff, "eff_paper": t1[6],
+            "cpu_cycles_model": round(cpu_cyc),
+            "cpu_cycles_paper": t1[7],
+            "speedup": speedup, "speedup_paper": t1[9],
+            "esave_soc": esave_soc, "esave_soc_paper": t1[13],
+            "steady_ii": sim.steady_ii(),
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    hdr = (f"{'kernel':13s} {'cycles':>7s} {'paper':>7s} {'err%':>6s} "
+           f"{'out/cyc':>8s} {'MOPs':>8s} {'pMOPs':>8s} {'mW':>6s} "
+           f"{'pmW':>6s} {'speedup':>8s} {'pspd':>6s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['kernel']:13s} {r['exec_cycles']:7d} "
+              f"{r['exec_cycles_paper']:7d} {100*r['cycles_err']:+6.1f} "
+              f"{r['outputs_per_cycle']:8.3f} {r['perf_mops']:8.1f} "
+              f"{r['perf_mops_paper']:8.1f} {r['cgra_mw']:6.2f} "
+              f"{r['cgra_mw_paper']:6.2f} {r['speedup']:8.2f} "
+              f"{r['speedup_paper']:6.2f}")
+
+
+if __name__ == "__main__":
+    main()

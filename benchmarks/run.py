@@ -1,0 +1,89 @@
+"""Benchmark aggregator: one section per paper table + kernel micros +
+calibration reports. Prints ``name,us_per_call,derived`` CSV rows at the
+end (harness contract) and a human-readable report above them.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import paper_data as PD
+from repro.core.energy import PowerModel, features_from_sim
+from repro.core.soc import cpu_model_report
+
+
+def main() -> None:
+    t_start = time.time()
+    from benchmarks import (bench_compare, bench_kernels, bench_multishot,
+                            bench_oneshot)
+
+    # ---- calibrate the power model across ALL 12 paper samples ----
+    print("=" * 72)
+    print("Power-model calibration (fitted on Tables I+II samples)")
+    multi_collected = bench_multishot.collect()
+    pm = PowerModel()
+    from repro.core.elastic_sim import simulate
+    from repro.core.paper_mappings import paper_mapping
+    samples = []
+    rng = np.random.default_rng(0)
+    for name, paper_key in bench_oneshot._PAPER_ROW.items():
+        if name == "find2min_brmg":
+            continue
+        m = paper_mapping(name)
+        sim = simulate(m, bench_oneshot._inputs_for(name, rng))
+        t1 = PD.TABLE_I[paper_key]
+        samples.append(features_from_sim(m, sim, 1.0, t1[5], t1[11]))
+    samples += [f for _, _, _, f in multi_collected if f is not None]
+    pm.fit(samples)
+    errs = [abs(r["cgra_rel_err"]) for r in pm.report()]
+    print(f"  CGRA power fit: mean |err| = {100*np.mean(errs):.1f}% over "
+          f"{len(errs)} samples; coefficients beta={np.round(pm.beta, 3)}")
+
+    print("=" * 72)
+    print("CPU cycle model calibration (CV32E40P, fixed architectural "
+          "weights)")
+    cerrs = []
+    for r in cpu_model_report():
+        cerrs.append(abs(r["rel_err"]))
+        print(f"  {r['kernel']:10s} paper={r['paper_cpu_cycles']:8d} "
+              f"model={r['model_cpu_cycles']:8d} "
+              f"err={r['rel_err']*100:+6.1f}%")
+    print(f"  mean |err| = {100*np.mean(cerrs):.1f}%")
+
+    print("=" * 72)
+    print("Table I — one-shot kernels")
+    bench_oneshot.main()
+    print("=" * 72)
+    print("Table II — multi-shot kernels")
+    bench_multishot.main()
+    print("=" * 72)
+    print("Table IV — state-of-the-art comparison")
+    bench_compare.main()
+    print("=" * 72)
+    print("Pallas kernel micro-benchmarks")
+    bench_kernels.main()
+
+    # ---- harness CSV contract ----
+    print("=" * 72)
+    print("name,us_per_call,derived")
+    clock = PD.CLOCK_MHZ
+    for r in bench_oneshot.run(pm):
+        us = r["exec_cycles"] / clock
+        print(f"oneshot_{r['kernel']},{us:.3f},"
+              f"perf_mops={r['perf_mops']:.1f};paper_err="
+              f"{r['cycles_err']:+.3f}")
+    for r in bench_multishot.run(pm):
+        us = r["total_cycles"] / clock
+        print(f"multishot_{r['kernel']},{us:.3f},"
+              f"perf_mops={r['perf_mops']:.1f};paper_err="
+              f"{r['cycles_err']:+.3f}")
+    for r in bench_kernels.run():
+        print(f"kernel_{r['kernel']},{r['us_xla_cpu']:.3f},"
+              f"tpu_roofline_us={r['tpu_roofline_us']:.3f}")
+    print(f"# total wall time {time.time() - t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serving demo: batched prefill + greedy decode with KV caches on the
+reduced qwen config (QKV-bias family), plus a mamba2 state-space decode to
+show O(1)-state long-context serving.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch import serve as S
+
+
+def main() -> None:
+    for arch in ("qwen1.5-4b", "mamba2-1.3b"):
+        print(f"=== serving {arch} (reduced config) ===")
+        sys.argv = ["serve", "--arch", arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "16", "--gen", "12"]
+        S.main()
+
+
+if __name__ == "__main__":
+    main()

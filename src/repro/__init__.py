@@ -1,0 +1,19 @@
+"""STRELA-JAX: reproduction of 'STRELA: STReaming ELAstic CGRA Accelerator
+for Embedded Systems' (Vázquez et al., 2024) + its TPU-scale adaptation.
+
+Layers:
+  repro.core      — the paper (DFG IR, mapper, elastic cycle sim, multi-shot
+                    planner, SoC/CPU/power models)
+  repro.kernels   — Pallas TPU kernels (fabric_stream, stream_matmul,
+                    stream_conv2d, flash_attention) + jnp oracles
+  repro.models    — the 10 assigned architectures (dense/MoE/SSM/hybrid/
+                    VLM/enc-dec), scan-over-layers, bf16
+  repro.configs   — exact assigned configs + reduced smoke variants + shapes
+  repro.launch    — production meshes, multi-pod dry-run, train/serve drivers
+  repro.roofline  — HLO cost parser + 3-term roofline analysis
+  repro.{data,optim,checkpoint,runtime} — substrate (pipeline, AdamW+WSD,
+                    mesh-agnostic checkpoints, fault tolerance, partitioning,
+                    pipeline parallelism, gradient compression)
+
+See DESIGN.md / EXPERIMENTS.md at the repository root.
+"""

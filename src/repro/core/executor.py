@@ -1,0 +1,305 @@
+"""Functional (un-timed) execution of STRELA DFGs — the semantic oracle.
+
+Two paths:
+  * **vectorized** — acyclic graphs (optionally with reductions that feed only
+    OUTPUT nodes): NumPy evaluation over the whole stream at once.
+  * **loop** — graphs with loop-carried back edges (dither, find2min) or
+    reductions consumed by interior nodes: per-token interpretation, exactly
+    mirroring the elastic token semantics.
+
+Both use a wrapping 32-bit integer datapath (the fabric's ALU width).
+The cycle-accurate timing lives in ``elastic_sim``; this module defines *what*
+a mapped kernel computes, and is the reference for the Pallas kernels and the
+fidelity checks of the elastic simulator itself.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import dfg as D
+from repro.core.isa import AluOp, CmpOp
+
+I32 = np.int32
+
+
+def wrap32(x) -> np.ndarray:
+    """Wrap to the fabric's 32-bit two's-complement datapath."""
+    return np.asarray(x, dtype=np.int64).astype(np.uint64).astype(np.uint32).astype(I32)
+
+
+def alu_eval(op: AluOp, a, b):
+    a64 = np.asarray(a, dtype=np.int64)
+    b64 = np.asarray(b, dtype=np.int64)
+    if op == AluOp.ADD:
+        r = a64 + b64
+    elif op == AluOp.SUB:
+        r = a64 - b64
+    elif op == AluOp.MUL:
+        r = a64 * b64
+    elif op == AluOp.SHL:
+        r = a64 << (b64 & 31)
+    elif op == AluOp.SHR:
+        r = a64 >> (b64 & 31)
+    elif op == AluOp.AND:
+        r = a64 & b64
+    elif op == AluOp.OR:
+        r = a64 | b64
+    elif op == AluOp.XOR:
+        r = a64 ^ b64
+    elif op == AluOp.NOP:
+        r = a64
+    else:  # pragma: no cover
+        raise ValueError(f"bad ALU op {op}")
+    return wrap32(r)
+
+
+def cmp_eval(op: CmpOp, a):
+    a = np.asarray(a)
+    if op == CmpOp.EQZ:
+        return (a == 0).astype(I32)
+    if op == CmpOp.GTZ:
+        return (a > 0).astype(I32)
+    raise ValueError(f"bad CMP op {op}")
+
+
+def _needs_loop(g: D.DFG) -> bool:
+    if g.back_edges():
+        return True
+    for n in g.nodes.values():
+        if n.is_reduction():
+            for e in g.out_edges(n.name):
+                if g.nodes[e.dst].kind != D.OUTPUT:
+                    return True
+    return False
+
+
+def execute(g: D.DFG, inputs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Run a DFG over input streams; returns OMN output streams (compacted)."""
+    if set(inputs) != set(g.inputs):
+        raise ValueError(f"inputs {sorted(inputs)} != DFG inputs {sorted(g.inputs)}")
+    arrays = {k: np.asarray(v, dtype=I32) for k, v in inputs.items()}
+    lengths = {v.shape[0] for v in arrays.values()}
+    if len(lengths) != 1:
+        raise ValueError(f"all input streams must share a length, got {lengths}")
+    (length,) = lengths
+    if _needs_loop(g):
+        return _execute_loop(g, arrays, length)
+    return _execute_vectorized(g, arrays, length)
+
+
+# ---------------------------------------------------------------------------
+# vectorized path
+# ---------------------------------------------------------------------------
+
+def _operand(g: D.DFG, vals, masks, node: D.Node, port: str):
+    e = g.operand(node.name, port)
+    if e is None:
+        return None, None
+    key = (e.src, e.src_port)
+    return vals[key], masks[key]
+
+
+def _execute_vectorized(g, arrays, length):
+    vals: Dict[Tuple[str, str], np.ndarray] = {}
+    masks: Dict[Tuple[str, str], np.ndarray] = {}
+    outputs: Dict[str, np.ndarray] = {}
+    full = np.ones(length, dtype=bool)
+    for name in g.topo_order():
+        n = g.nodes[name]
+        if n.kind == D.INPUT:
+            vals[(name, "out")], masks[(name, "out")] = arrays[name], full
+        elif n.kind == D.CONST:
+            vals[(name, "out")] = np.full(length, n.value, dtype=I32)
+            masks[(name, "out")] = full
+        elif n.kind == D.ALU:
+            a, ma = _operand(g, vals, masks, n, "a")
+            b, mb = _operand(g, vals, masks, n, "b")
+            if n.is_reduction():
+                vals[(name, "out")], masks[(name, "out")] = _reduce_vec(n, a, ma, length)
+                continue
+            if b is None:
+                b, mb = np.full(length, n.value, dtype=I32), full
+            m = ma & mb
+            vals[(name, "out")] = alu_eval(n.op, a, b)
+            masks[(name, "out")] = m
+        elif n.kind == D.CMP:
+            a, ma = _operand(g, vals, masks, n, "a")
+            b, mb = _operand(g, vals, masks, n, "b")
+            if b is not None:
+                a, ma = alu_eval(AluOp.SUB, a, b), ma & mb
+            elif n.value is not None:
+                a = alu_eval(AluOp.SUB, a, np.full(length, n.value, dtype=I32))
+            vals[(name, "out")] = cmp_eval(n.op, a)
+            masks[(name, "out")] = ma
+        elif n.kind == D.MUX:
+            a, ma = _operand(g, vals, masks, n, "a")
+            b, mb = _operand(g, vals, masks, n, "b")
+            c, mc = _operand(g, vals, masks, n, "ctrl")
+            if b is None:
+                b, mb = np.full(length, n.value, dtype=I32), full
+            vals[(name, "out")] = np.where(c != 0, a, b).astype(I32)
+            masks[(name, "out")] = ma & mb & mc
+        elif n.kind == D.BRANCH:
+            a, ma = _operand(g, vals, masks, n, "a")
+            c, mc = _operand(g, vals, masks, n, "ctrl")
+            m = ma & mc
+            vals[(name, "t")] = a
+            masks[(name, "t")] = m & (c != 0)
+            vals[(name, "f")] = a
+            masks[(name, "f")] = m & (c == 0)
+        elif n.kind == D.MERGE:
+            a, ma = _operand(g, vals, masks, n, "a")
+            b, mb = _operand(g, vals, masks, n, "b")
+            if np.any(ma & mb):
+                raise ValueError(f"MERGE {name}: non-complementary token masks")
+            vals[(name, "out")] = np.where(ma, a, b).astype(I32)
+            masks[(name, "out")] = ma | mb
+        elif n.kind == D.OUTPUT:
+            a, ma = _operand(g, vals, masks, n, "a")
+            out = a[ma]
+            if n.emit_every == 0 and out.size:   # OMN 'last value' mode
+                out = out[-1:]
+            outputs[name] = out.astype(I32)
+    return outputs
+
+
+def _reduce_vec(n: D.Node, a: np.ndarray, ma: np.ndarray, length: int):
+    """Segmented accumulate: acc = op(acc, x); emit & reset every k tokens
+    (k=0: emit once at end). Vectorized-path reductions feed only OUTPUTs,
+    so we return the emission stream directly."""
+    if not np.all(ma):
+        raise ValueError("reductions under branch masks need the loop path")
+    if n.value is not None:  # paced counter: acc' = op(acc, const)
+        x = np.full(length, n.value, dtype=I32)
+    else:
+        x = a
+    k = n.emit_every if n.emit_every else length
+    if length % k != 0:
+        raise ValueError(f"stream length {length} not divisible by segment {k}")
+    seg = np.asarray(x, dtype=np.int64).reshape(length // k, k)
+    init = np.int64(n.acc_init)
+    if n.op == AluOp.ADD:
+        res = init + seg.sum(axis=1)
+    elif n.op == AluOp.SUB:
+        res = init - seg.sum(axis=1)
+    elif n.op == AluOp.MUL:
+        res = init * np.prod(seg, axis=1)
+    elif n.op in (AluOp.AND, AluOp.OR, AluOp.XOR):
+        ufunc = {AluOp.AND: np.bitwise_and, AluOp.OR: np.bitwise_or,
+                 AluOp.XOR: np.bitwise_xor}[n.op]
+        res = ufunc(init, ufunc.reduce(seg, axis=1))
+    else:
+        raise ValueError(f"unsupported reduction op {n.op}")
+    emit = wrap32(res)
+    mask = np.ones(emit.shape[0], dtype=bool)
+    return emit, mask
+
+
+# ---------------------------------------------------------------------------
+# loop path (token-by-token)
+# ---------------------------------------------------------------------------
+
+def _execute_loop(g, arrays, length):
+    order = g.topo_order()
+    back = {(e.dst, e.dst_port): e for e in g.back_edges()}
+    carry = {key: np.int64(e.init) for key, e in back.items()}
+    accs = {n.name: np.int64(n.acc_init) for n in g.nodes.values() if n.is_reduction()}
+    out_streams: Dict[str, List[int]] = {o: [] for o in g.outputs}
+    last_vals: Dict[str, Optional[int]] = {o: None for o in g.outputs}
+
+    def read(node: D.Node, port: str, vals, valid):
+        key = (node.name, port)
+        if key in back:
+            return carry[key], True
+        e = g.operand(node.name, port)
+        if e is None:
+            return None, None
+        return vals.get((e.src, e.src_port)), valid.get((e.src, e.src_port), False)
+
+    for t in range(length):
+        vals: Dict[Tuple[str, str], np.int64] = {}
+        valid: Dict[Tuple[str, str], bool] = {}
+        for name in order:
+            n = g.nodes[name]
+            if n.kind == D.INPUT:
+                vals[(name, "out")], valid[(name, "out")] = np.int64(arrays[name][t]), True
+            elif n.kind == D.CONST:
+                vals[(name, "out")], valid[(name, "out")] = np.int64(n.value), True
+            elif n.kind == D.ALU:
+                a, va = read(n, "a", vals, valid)
+                b, vb = read(n, "b", vals, valid)
+                if n.is_reduction():
+                    if not va:
+                        valid[(name, "out")] = False
+                        continue
+                    x = np.int64(n.value) if n.value is not None else a
+                    accs[name] = np.int64(alu_eval(n.op, accs[name], x))
+                    k = n.emit_every
+                    emit = (k == 1) or (k > 1 and (t + 1) % k == 0) or \
+                           (k == 0 and t == length - 1)
+                    vals[(name, "out")] = accs[name]
+                    valid[(name, "out")] = bool(emit)
+                    if k > 1 and (t + 1) % k == 0:
+                        accs[name] = np.int64(n.acc_init)
+                    continue
+                if b is None:
+                    b, vb = np.int64(n.value), True
+                ok = bool(va and vb)
+                vals[(name, "out")] = np.int64(alu_eval(n.op, a, b)) if ok else np.int64(0)
+                valid[(name, "out")] = ok
+            elif n.kind == D.CMP:
+                a, va = read(n, "a", vals, valid)
+                b, vb = read(n, "b", vals, valid)
+                if b is not None:
+                    a, va = np.int64(alu_eval(AluOp.SUB, a, b)), bool(va and vb)
+                elif n.value is not None and va:
+                    a = np.int64(alu_eval(AluOp.SUB, a, np.int64(n.value)))
+                vals[(name, "out")] = np.int64(cmp_eval(n.op, a)) if va else np.int64(0)
+                valid[(name, "out")] = bool(va)
+            elif n.kind == D.MUX:
+                a, va = read(n, "a", vals, valid)
+                b, vb = read(n, "b", vals, valid)
+                c, vc = read(n, "ctrl", vals, valid)
+                if b is None:
+                    b, vb = np.int64(n.value), True
+                ok = bool(va and vb and vc)
+                vals[(name, "out")] = (a if c != 0 else b) if ok else np.int64(0)
+                valid[(name, "out")] = ok
+            elif n.kind == D.BRANCH:
+                a, va = read(n, "a", vals, valid)
+                c, vc = read(n, "ctrl", vals, valid)
+                ok = bool(va and vc)
+                vals[(name, "t")] = a if ok else np.int64(0)
+                valid[(name, "t")] = ok and c != 0
+                vals[(name, "f")] = a if ok else np.int64(0)
+                valid[(name, "f")] = ok and c == 0
+            elif n.kind == D.MERGE:
+                a, va = read(n, "a", vals, valid)
+                b, vb = read(n, "b", vals, valid)
+                if va and vb:
+                    raise ValueError(f"MERGE {name}: both inputs valid at t={t}")
+                vals[(name, "out")] = a if va else (b if vb else np.int64(0))
+                valid[(name, "out")] = bool(va or vb)
+            elif n.kind == D.OUTPUT:
+                a, va = read(n, "a", vals, valid)
+                if va:
+                    if n.emit_every == 0:
+                        last_vals[name] = int(a)
+                    else:
+                        out_streams[name].append(int(a))
+        # latch back-edge carries from this token's emissions
+        for key, e in back.items():
+            src_key = (e.src, e.src_port)
+            if valid.get(src_key, False):
+                carry[key] = np.int64(vals[src_key])
+
+    outputs = {}
+    for o in g.outputs:
+        if g.nodes[o].emit_every == 0:
+            outputs[o] = np.array([last_vals[o]] if last_vals[o] is not None else [],
+                                  dtype=I32)
+        else:
+            outputs[o] = np.array(out_streams[o], dtype=I32)
+    return outputs

@@ -1,0 +1,92 @@
+"""fabric_stream — the one-shot STRELA engine as a fused Pallas TPU kernel.
+
+TPU adaptation of the paper's one-shot mapping strategy (DESIGN.md §2):
+
+  * each IMN/OMN affine stream  ->  a ``BlockSpec`` over a 1-D stream laid
+    out as (blocks, 8, 128) tiles (sublane x lane), so the HBM->VMEM copy
+    pipeline plays the role of the elastic handshake (latency tolerance);
+  * the mapped DFG body          ->  the kernel body: the topologically
+    ordered node list is emitted as VPU ops over the whole tile, i.e. the
+    16-PE spatial pipeline becomes 8x128-lane SIMD;
+  * one-shot semantics           ->  one fused kernel: the entire DFG
+    makes a single HBM round-trip per stream element, exactly the paper's
+    no-scratchpad streaming argument;
+  * unrolling (strategy 2)       ->  covered by the lane dimension (every
+    tile processes 1024 elements of every lane simultaneously).
+
+Only acyclic DFGs lower here (the fabric's loop-carried kernels map to
+``lax.scan`` on TPU — see DESIGN.md §2 'Branch/Merge' row).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import dfg as D
+from repro.core.isa import AluOp, CmpOp
+from repro.kernels import ref
+
+LANES = 128
+SUBLANES = 8
+TILE = LANES * SUBLANES        # stream elements per grid step per sublane grp
+
+
+def _emit_body(g: D.DFG, in_names: List[str], out_names: List[str]):
+    """Build the Pallas kernel body evaluating the DFG on one VMEM tile."""
+
+    def body(*refs):
+        ins = refs[:len(in_names)]
+        outs = refs[len(in_names):]
+        arrays = {name: r[...] for name, r in zip(in_names, ins)}
+        vals = ref.eval_dfg_elementwise(g, arrays)
+        for name, r in zip(out_names, outs):
+            r[...] = vals[name].astype(r.dtype)
+
+    return body
+
+
+def fabric_stream(g: D.DFG, inputs: Dict[str, jax.Array],
+                  block_rows: int = 8,
+                  interpret: bool | None = None) -> Dict[str, jax.Array]:
+    """Run an acyclic DFG over 1-D int32 streams with a fused Pallas kernel.
+
+    ``block_rows``: sublane rows per tile (8 -> 1024-element tiles); the
+    perf-iteration knob corresponding to the paper's unroll factor.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    in_names = list(g.inputs)
+    out_names = list(g.outputs)
+    (length,) = {int(inputs[n].shape[0]) for n in in_names}
+    tile = block_rows * LANES
+    padded = pl.cdiv(length, tile) * tile
+    grid = (padded // tile,)
+
+    def pad2d(x):
+        x = jnp.asarray(x, dtype=jnp.int32)
+        x = jnp.pad(x, (0, padded - length))
+        return x.reshape(-1, LANES)
+
+    ins2d = [pad2d(inputs[n]) for n in in_names]
+    block = (block_rows, LANES)
+    in_specs = [pl.BlockSpec(block, lambda i: (i, 0)) for _ in in_names]
+    out_specs = [pl.BlockSpec(block, lambda i: (i, 0)) for _ in out_names]
+    out_shapes = [jax.ShapeDtypeStruct((padded // LANES, LANES), jnp.int32)
+                  for _ in out_names]
+
+    fn = pl.pallas_call(
+        _emit_body(g, in_names, out_names),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+    outs = fn(*ins2d)
+    if not isinstance(outs, (list, tuple)):
+        outs = [outs]
+    return {name: o.reshape(-1)[:length] for name, o in zip(out_names, outs)}

@@ -1,0 +1,129 @@
+"""flash_attention — tiled online-softmax attention (LM-stack hot spot).
+
+The attention analogue of the paper's streaming argument: K/V stream
+through VMEM in blocks (the IMN role) while running max/denominator/
+accumulator live in VMEM scratch (the fabric's loop-carried state), so the
+(seq x seq) logits matrix never materializes in HBM.
+
+Grid: (heads, q_blocks, k_blocks), k innermost/'arbitrary'; the causal mask
+is applied per-tile from iota; fully-masked k-tiles are skipped via
+``pl.when`` (the elastic 'no token, no firing' rule).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _HAS_PLTPU = True
+except Exception:  # pragma: no cover
+    _HAS_PLTPU = False
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q,k,v: (heads, seq, head_dim) with kv heads already broadcast."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    h, sq, d = q.shape
+    _, sk, _ = k.shape
+    scale = 1.0 / (d ** 0.5)
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    sqp = pl.cdiv(sq, bq) * bq
+    skp = pl.cdiv(sk, bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skp - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skp - sk), (0, 0)))
+    # padded k columns must never win the softmax
+    k_steps = skp // bk
+    grid = (h, sqp // bq, k_steps)
+
+    scratch = ([pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, d), jnp.float32)] if _HAS_PLTPU else [])
+    kwargs = {}
+    if _HAS_PLTPU and not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    # mask padded keys by folding them into the causal/key-range mask:
+    # since padded ki >= sk and all real qi <= sq-1 < skp, padded columns
+    # are masked in causal mode; for non-causal, mask via key index.
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        return _masked_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                              acc_ref, bq=bq, bk=bk, k_steps=k_steps,
+                              scale=scale, causal=causal, sk=sk,
+                              q_off=sk - sq)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bq, d), lambda h_, i, j: (h_, i, 0)),
+                  pl.BlockSpec((1, bk, d), lambda h_, i, j: (h_, j, 0)),
+                  pl.BlockSpec((1, bk, d), lambda h_, i, j: (h_, j, 0))],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h_, i, j: (h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sqp, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(qp, kp, vp)
+    return out[:, :sq]
+
+
+def _masked_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                   bq: int, bk: int, k_steps: int, scale: float,
+                   causal: bool, sk: int, q_off: int = 0):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+    # index grids hoisted out of pl.when (interpret mode cannot lower
+    # program_id inside a conditional branch). q_off aligns queries to the
+    # END of the key range (standard decode convention: with sq < sk, query
+    # i attends keys <= i + sk - sq, matching the jnp.tril(k=sk-sq) oracle).
+    qi = q_off + qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    ki = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        mask = ki < sk
+        if causal:
+            mask = mask & (qi >= ki)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        @pl.when(kb * bk <= q_off + qb * bq + bq - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(kb == k_steps - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)

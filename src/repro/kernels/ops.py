@@ -1,0 +1,46 @@
+"""Public jit'd wrappers around the Pallas kernels (CPU falls back to
+interpret mode automatically; ``use_pallas=False`` selects the XLA path,
+which is what the dry-run models lower by default)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfg as D
+from repro.kernels import ref
+from repro.kernels.fabric_stream import fabric_stream
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.stream_conv2d import stream_conv2d
+from repro.kernels.stream_matmul import stream_matmul
+
+
+def fabric_elementwise(g: D.DFG, inputs: Dict[str, jax.Array],
+                       use_pallas: bool = True,
+                       block_rows: int = 8) -> Dict[str, jax.Array]:
+    """One-shot DFG over streams: Pallas fused kernel or jnp reference."""
+    if use_pallas:
+        return fabric_stream(g, inputs, block_rows=block_rows)
+    arrays = {k: jnp.asarray(v, dtype=jnp.int32) for k, v in inputs.items()}
+    return ref.eval_dfg_elementwise(g, arrays)
+
+
+def matmul(a: jax.Array, b: jax.Array, use_pallas: bool = True, **kw) -> jax.Array:
+    if use_pallas:
+        return stream_matmul(a, b, **kw)
+    return ref.matmul(a, b)
+
+
+def conv2d_3x3(img: jax.Array, kern: jax.Array, use_pallas: bool = True,
+               **kw) -> jax.Array:
+    if use_pallas:
+        return stream_conv2d(img, kern, **kw)
+    return ref.conv2d_3x3(img, kern)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+              use_pallas: bool = True, **kw) -> jax.Array:
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, **kw)
+    return ref.flash_attention(q, k, v, causal=causal)

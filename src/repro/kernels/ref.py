@@ -1,0 +1,143 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These define *what* each kernel computes; the Pallas implementations are
+asserted allclose against them (interpret mode on CPU, shapes/dtypes swept
+by hypothesis in the tests).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfg as D
+from repro.core.isa import AluOp, CmpOp
+
+
+# ---------------------------------------------------------------------------
+# fabric_stream: acyclic DFG evaluated elementwise over streams
+# ---------------------------------------------------------------------------
+
+def dfg_node_eval(op: AluOp, a, b):
+    if op == AluOp.ADD:
+        return a + b
+    if op == AluOp.SUB:
+        return a - b
+    if op == AluOp.MUL:
+        return a * b
+    if op == AluOp.SHL:
+        return jnp.left_shift(a, jnp.bitwise_and(b, 31))
+    if op == AluOp.SHR:
+        return jnp.right_shift(a, jnp.bitwise_and(b, 31))
+    if op == AluOp.AND:
+        return jnp.bitwise_and(a, b)
+    if op == AluOp.OR:
+        return jnp.bitwise_or(a, b)
+    if op == AluOp.XOR:
+        return jnp.bitwise_xor(a, b)
+    if op == AluOp.NOP:
+        return a
+    raise ValueError(op)
+
+
+def eval_dfg_elementwise(g: D.DFG, inputs: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Evaluate an acyclic, branch-resolved DFG over whole streams.
+
+    BRANCH/MERGE pairs must be reducible to selects (complementary
+    predicates) — the pattern the fabric supports; loop-carried kernels are
+    out of scope here (they lower to lax.scan, not a streaming kernel).
+    """
+    if g.back_edges():
+        raise ValueError("fabric_stream handles acyclic DFGs only")
+    vals: Dict[tuple, jax.Array] = {}
+    outs: Dict[str, jax.Array] = {}
+    for name in g.topo_order():
+        n = g.nodes[name]
+        def operand(port):
+            e = g.operand(name, port)
+            return None if e is None else vals[(e.src, e.src_port)]
+        if n.kind == D.INPUT:
+            vals[(name, "out")] = inputs[name]
+        elif n.kind == D.CONST:
+            vals[(name, "out")] = jnp.asarray(n.value, dtype=jnp.int32)
+        elif n.kind == D.ALU:
+            if n.is_reduction():
+                raise ValueError("reductions lower to stream_matmul-style "
+                                 "accumulation, not fabric_stream")
+            a = operand("a")
+            b = operand("b")
+            if b is None:
+                b = jnp.asarray(n.value, dtype=a.dtype)
+            vals[(name, "out")] = dfg_node_eval(n.op, a, b)
+        elif n.kind == D.CMP:
+            a = operand("a")
+            b = operand("b")
+            if b is not None:
+                a = a - b
+            elif n.value is not None:
+                a = a - jnp.asarray(n.value, dtype=a.dtype)
+            r = (a == 0) if n.op == CmpOp.EQZ else (a > 0)
+            vals[(name, "out")] = r.astype(jnp.int32)
+        elif n.kind == D.MUX:
+            a, c = operand("a"), operand("ctrl")
+            b = operand("b")
+            if b is None:
+                b = jnp.asarray(n.value, dtype=a.dtype)
+            vals[(name, "out")] = jnp.where(c != 0, a, b)
+        elif n.kind == D.BRANCH:
+            a, c = operand("a"), operand("ctrl")
+            # value networks; the predicate travels alongside for the MERGE
+            vals[(name, "t")] = a
+            vals[(name, "f")] = a
+            vals[(name, "_pred")] = c
+        elif n.kind == D.MERGE:
+            ea = g.operand(name, "a")
+            eb = g.operand(name, "b")
+            pa = vals.get((ea.src, "_pred"))
+            pb = vals.get((eb.src, "_pred"))
+            pred = pa if pa is not None else pb
+            if pred is None:
+                raise ValueError("MERGE without branch predicates is not "
+                                 "select-reducible")
+            a, b = vals[(ea.src, ea.src_port)], vals[(eb.src, eb.src_port)]
+            take_a = pred != 0 if ea.src_port == "t" else pred == 0
+            vals[(name, "out")] = jnp.where(take_a, a, b)
+        elif n.kind == D.OUTPUT:
+            e = g.operand(name, "a")
+            outs[name] = vals[(e.src, e.src_port)]
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# stream_matmul / stream_conv2d / flash_attention
+# ---------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def conv2d_3x3(img: jax.Array, kern: jax.Array) -> jax.Array:
+    """'valid' 3x3 convolution (correlation, matching the fidelity layer)."""
+    H, W = img.shape
+    out = jnp.zeros((H - 2, W - 2), dtype=jnp.float32)
+    for r in range(3):
+        for c in range(3):
+            out = out + kern[r, c] * img[r:H - 2 + r, c:W - 2 + c].astype(jnp.float32)
+    return out
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Reference attention: q,k,v of shape (heads, seq, head_dim); GQA is
+    resolved (kv heads broadcast) before the call."""
+    h, sq, d = q.shape
+    _, sk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        logits = jnp.where(mask[None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,79 @@
+"""stream_matmul — the multi-shot engine: K-chunked MXU matmul.
+
+TPU adaptation of mapping strategy 3 (multi-shot kernels): the paper splits
+a matmul into per-row-triple shots, re-arming stream bases between shots;
+here every (m, n) output tile is produced by iterating the k-grid axis —
+the re-configuration between shots becomes the per-step ``index_map``
+offset change, amortized by the Pallas pipeline exactly as the paper
+amortizes reconfiguration over long streams.
+
+Grid: (M/bm, N/bn, K/bk), k innermost with ``arbitrary`` semantics; a VMEM
+scratch accumulator carries partial sums across k-steps (the paper's
+memory-resident partial plane), and the output is written once on the last
+k step. Block shapes default to MXU-aligned 128x128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific extras are unavailable on CPU builds
+    from jax.experimental.pallas import tpu as pltpu
+    _HAS_PLTPU = True
+except Exception:  # pragma: no cover
+    _HAS_PLTPU = False
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret", "out_dtype"))
+def stream_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+                  bk: int = 128, interpret: bool | None = None,
+                  out_dtype=jnp.float32) -> jax.Array:
+    """C = A @ B with fp32 MXU accumulation. Shapes padded to block multiples."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    Mp, Np, Kp = (pl.cdiv(M, bm) * bm, pl.cdiv(N, bn) * bn, pl.cdiv(K, bk) * bk)
+    a = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))
+    b = jnp.pad(b, ((0, Kp - K), (0, Np - N)))
+    k_steps = Kp // bk
+    grid = (Mp // bm, Np // bn, k_steps)
+
+    # VMEM scratch accumulator (interpret mode on CPU supports these too)
+    scratch_shapes = [pltpu.VMEM((bm, bn), jnp.float32)] if _HAS_PLTPU else []
+
+    kwargs = {}
+    if _HAS_PLTPU and not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+        **kwargs,
+    )(a, b)
+    return out[:M, :N]

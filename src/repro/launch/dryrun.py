@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the appropriate step function (train_step / prefill /
+decode_step) is jitted with production in/out shardings and lowered against
+ShapeDtypeStructs — no parameter ever materializes. A successful
+``.compile()`` proves the distribution (sharding propagation, collectives,
+memory) is coherent on the 16x16 single-pod mesh and the 2x16x16 multi-pod
+mesh; ``memory_analysis()`` proves it fits; ``cost_analysis()`` + the
+optimized-HLO collective parse feed EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, all_archs, cell_runnable, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import ModelAPI, build_model
+from repro.optim.adamw import AdamW, clip_by_global_norm, cosine_schedule
+from repro.roofline import analysis as RA
+from repro.runtime import partition as PT
+
+STACKED = ("layers", "enc_layers", "dec_layers")
+
+
+def count_params(sds_tree) -> float:
+    return float(sum(x.size for x in jax.tree_util.tree_leaves(sds_tree)))
+
+
+def count_active_params(cfg: ArchConfig, sds_tree) -> float:
+    """Active parameters per token (MoE: routed experts scaled by k/E)."""
+    flat = PT.tree_paths(sds_tree)
+    total = 0.0
+    for path, leaf in flat.items():
+        frac = 1.0
+        if cfg.moe is not None and "w_experts" in path:
+            frac = cfg.moe.top_k / cfg.moe.n_experts
+        total += leaf.size * frac
+    return total
+
+
+def make_train_step(api: ModelAPI, opt: AdamW):
+    def step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(api.loss, has_aux=True)(
+            params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm, "aux": aux}
+    return step
+
+
+def _shardify(mesh, spec_tree):
+    names = tuple(mesh.axis_names)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, PT.filter_spec(s, names)), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             skip_compile: bool = False,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    import dataclasses as _dc
+    cfg = get_arch(arch_id)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {"arch": arch_id, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16"}
+    ok, reason = cell_runnable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.reshape(-1))
+    api = build_model(cfg)
+    params_sds = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0)))
+    pspecs = PT.param_specs(params_sds, STACKED)
+    pshard = _shardify(mesh, pspecs)
+    batch_sds = api.input_specs(shape)
+    bshard = _shardify(mesh, PT.batch_specs(batch_sds, shape.global_batch))
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(lr=cosine_schedule(3e-4, 100, 10000))
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            ospecs_inner = PT.zero1_specs(params_sds, stacked_prefixes=STACKED)
+            ospecs = type(opt_sds)(ospecs_inner, ospecs_inner, P())
+            oshard = _shardify(mesh, ospecs)
+            fn = jax.jit(make_train_step(api, opt),
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_sds, opt_sds, batch_sds)
+            tokens = shape.global_batch * shape.seq_len
+            mf = RA.model_flops_train(count_active_params(cfg, params_sds),
+                                      tokens)
+        elif shape.kind == "prefill":
+            fn = jax.jit(api.prefill, in_shardings=(pshard, bshard))
+            lowered = fn.lower(params_sds, batch_sds)
+            tokens = shape.global_batch * shape.seq_len
+            mf = RA.model_flops_decode(count_active_params(cfg, params_sds),
+                                       tokens)
+        else:  # decode
+            state_sds = api.state_specs(shape)
+            sspecs = PT.decode_state_specs(cfg, shape, state_sds)
+            sshard = _shardify(mesh, sspecs)
+            if shape.global_batch == 1 and cfg.family != "ssm":
+                # §Perf C2: single-request decode — weights 2-D sharded
+                # (model x data) so all 256 chips split every projection
+                # instead of 16 data rows replicating them. Confirmed for
+                # hybrid (zamba 0.200->0.132 s/token); REFUTED for pure ssm
+                # (mamba's weights are too small — the weight all-gathers
+                # cost more than the replicated reads), hence the family
+                # condition. See EXPERIMENTS.md §Perf C.
+                pshard = _shardify(mesh, PT.zero1_specs(
+                    params_sds, stacked_prefixes=STACKED))
+            tok_spec = P(("pod", "data"), None) if shape.global_batch > 1 \
+                else P(None, None)
+            tok_spec = PT.filter_spec(tok_spec, tuple(mesh.axis_names))
+            fn = jax.jit(api.decode_step,
+                         in_shardings=(pshard, sshard,
+                                       NamedSharding(mesh, tok_spec), None),
+                         out_shardings=(None, sshard),
+                         donate_argnums=(1,))
+            tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            len_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = fn.lower(params_sds, state_sds, tok_sds, len_sds)
+            mf = RA.model_flops_decode(count_active_params(cfg, params_sds),
+                                       shape.global_batch)
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        if skip_compile:
+            rec["status"] = "lowered"
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    # ---- memory analysis ----
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes_per_device": int(
+                getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "temp_size_in_bytes", 0)) // max(chips, 1),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)[:200]}
+
+    # ---- cost analysis (HLO-text parser: loop-trip-aware; XLA's own
+    # cost_analysis does not scale while bodies on the CPU backend) ----
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        rec["xla_cost_analysis"] = {"flops": float(ca.get("flops", 0.0)),
+                                    "bytes": float(ca.get("bytes accessed",
+                                                          0.0))}
+    except Exception as e:  # pragma: no cover
+        rec["xla_cost_analysis"] = {"error": str(e)[:200]}
+    try:
+        from repro.roofline.hlo_costs import HLOCosts
+        hlo = compiled.as_text()
+        hc = HLOCosts(hlo)
+        # the optimized module is post-SPMD: every shape is per-chip, so
+        # globals are per-chip costs x chips (balanced SPMD assumption)
+        flops = hc.flops() * chips
+        nbytes = hc.hbm_bytes() * chips
+        by_type = {k: v * chips for k, v in hc.collective_bytes().items()}
+        coll_bytes = sum(by_type.values())
+        rec["collectives"] = {"bytes_by_type": by_type,
+                              "total_bytes": coll_bytes}
+        rec["hlo_kb"] = len(hlo) // 1024
+    except Exception as e:  # pragma: no cover
+        flops, nbytes, coll_bytes = 0.0, 0.0, 0.0
+        rec["collectives"] = {"error": str(e)[:200]}
+
+    rl = RA.roofline_from_costs(flops, nbytes, coll_bytes, chips, mf)
+    rec["roofline"] = {
+        "flops": rl.flops, "hbm_bytes": rl.hbm_bytes,
+        "collective_bytes": rl.collective_bytes, "chips": chips,
+        "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+        "collective_s": rl.collective_s, "bottleneck": rl.bottleneck,
+        "model_flops": mf,
+        "useful_fraction": rl.useful_fraction(),
+        "roofline_fraction": rl.roofline_fraction(),
+    }
+    rec["n_params"] = count_params(params_sds)
+    rec["n_params_active"] = count_active_params(cfg, params_sds)
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-compile", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="config override key=value (e.g. "
+                         "attention_impl=chunked, moe_impl=gspmd) — used to "
+                         "reproduce the §Perf iterations")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = int(v) if v.isdigit() else v
+
+    cells = []
+    archs = list(all_archs()) if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                t0 = time.time()
+                try:
+                    rec = run_cell(arch, shape, mp,
+                                   skip_compile=args.skip_compile,
+                                   overrides=overrides or None)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {str(e)[:400]}"}
+                    traceback.print_exc()
+                rec["wall_s"] = round(time.time() - t0, 1)
+                results.append(rec)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    rl = rec["roofline"]
+                    extra = (f" bottleneck={rl['bottleneck']}"
+                             f" compute={rl['compute_s']:.4f}s"
+                             f" mem={rl['memory_s']:.4f}s"
+                             f" coll={rl['collective_s']:.4f}s")
+                    mem = rec.get("memory", {})
+                    if "peak_bytes_per_device" in mem:
+                        extra += (f" mem/dev="
+                                  f"{mem['peak_bytes_per_device']/2**30:.2f}GiB")
+                print(f"[dryrun] {tag}: {status} ({rec['wall_s']}s){extra}",
+                      flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = len(results) - n_ok - n_skip
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} failed")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod ('data' x 'model'); the multi-pod mesh adds
+    a leading 'pod' axis (2 pods = 512 chips). Must be called in a process
+    whose jax platform exposes enough devices (see launch/dryrun.py)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
+    """Debug mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh(
+        (data, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

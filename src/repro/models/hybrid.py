@@ -1,0 +1,134 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block
+applied every ``share_every`` layers (weight reuse — the memory trick of
+Zamba), with the block input formed from [hidden, original embedding]
+concatenation through a down-projection.
+
+Decode state = per-layer SSM states + one KV cache per shared-block
+application site; attention cost appears only at n_layers/share_every
+points, keeping 524k-token decode deployable (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.runtime.partition import shard
+
+
+def _attn_cfg(cfg: ArchConfig) -> L.AttnCfg:
+    return L.AttnCfg(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                     cfg.qkv_bias, cfg.rope_theta)
+
+
+def n_shared_sites(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.share_every
+
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    km, ks, ke, kc = jax.random.split(key, 4)
+    layer_keys = jax.random.split(km, cfg.n_layers)
+
+    def one(k):
+        return {"norm": jnp.ones((cfg.d_model,), cfg.jdtype),
+                "ssm": S.ssm_init(k, cfg, cfg.jdtype)}
+    k1, k2 = jax.random.split(ks)
+    shared = {
+        "concat_proj": L.dense_init(kc, 2 * cfg.d_model, cfg.d_model,
+                                    cfg.jdtype),
+        "ln1": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.jdtype),
+        "attn": L.attn_init(k1, _attn_cfg(cfg), cfg.jdtype),
+        "mlp": L.mlp_init(k2, L.MlpCfg(cfg.d_model, cfg.d_ff,
+                                       cfg.activation), cfg.jdtype),
+    }
+    return {"embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model, cfg.jdtype),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.jdtype),
+            "layers": jax.vmap(one)(layer_keys),
+            "shared": shared}
+
+
+def _shared_block(cfg, sp, x, x0, positions, cache, cache_len):
+    h = jnp.concatenate([x, x0], axis=-1) @ sp["concat_proj"]
+    a, new_cache = L.attention(sp["attn"], _attn_cfg(cfg),
+                               L.rmsnorm(h, sp["ln1"]), positions,
+                               cache, cache_len)
+    h = h + a
+    h = h + L.mlp(sp["mlp"], L.MlpCfg(cfg.d_model, cfg.d_ff, cfg.activation),
+                  L.rmsnorm(h, sp["ln2"]))
+    return x + h, new_cache
+
+
+def forward(params: Dict, cfg: ArchConfig, tokens: jax.Array,
+            states=None, caches=None, cache_len=None):
+    """states: stacked per-layer SSM states; caches: stacked per-site KV.
+    Both None for training."""
+    x = params["embed"][tokens]
+    x = shard(x, P(("pod", "data"), None, None))
+    x0 = x
+    B, S_len = tokens.shape
+    base = cache_len if cache_len is not None else 0
+    positions = base + jnp.arange(S_len)[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (B, S_len))
+
+    k = cfg.share_every
+    sites = n_shared_sites(cfg)
+    sp = params["shared"]
+
+    def mamba_block(lp, x, st):
+        h, nst = S.ssm_forward(lp["ssm"], cfg, L.rmsnorm(x, lp["norm"]), st)
+        return x + h, nst
+
+    if cfg.remat:
+        mamba_block = jax.checkpoint(mamba_block)
+
+    # group layers: [k mamba layers] + shared block, repeated `sites` times
+    new_states = [] if states is not None else None
+    new_caches = [] if caches is not None else None
+    for g in range(sites):
+        lp_g = jax.tree_util.tree_map(lambda a: a[g * k:(g + 1) * k],
+                                      params["layers"])
+        if states is None:
+            def body(x, lp):
+                x, _ = mamba_block(lp, x, None)
+                return x, None
+            x, _ = lax.scan(body, x, lp_g)
+        else:
+            st_g = jax.tree_util.tree_map(lambda a: a[g * k:(g + 1) * k],
+                                          states)
+            def body(x, scanned):
+                lp, st = scanned
+                x, nst = mamba_block(lp, x, st)
+                return x, nst
+            x, nst_g = lax.scan(body, x, (lp_g, st_g))
+            new_states.append(nst_g)
+        cache_g = (jax.tree_util.tree_map(lambda a: a[g], caches)
+                   if caches is not None else None)
+        x, nc = _shared_block(cfg, sp, x, x0, positions, cache_g, cache_len)
+        if caches is not None:
+            new_caches.append(nc)
+
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = x @ params["embed"].T
+    logits = shard(logits, P(("pod", "data"), None, "model"))
+    ns = (jax.tree_util.tree_map(lambda *t: jnp.concatenate(t, 0),
+                                 *new_states) if new_states else None)
+    nc = (jax.tree_util.tree_map(lambda *t: jnp.stack(t, 0), *new_caches)
+          if new_caches else None)
+    return logits, (ns, nc), jnp.zeros((), jnp.float32)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int):
+    states = S.init_lm_states(cfg, batch)
+    sites = n_shared_sites(cfg)
+    kv = (jnp.zeros((sites, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                    cfg.jdtype),
+          jnp.zeros((sites, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                    cfg.jdtype))
+    return states, kv

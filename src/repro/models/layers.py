@@ -1,0 +1,307 @@
+"""Shared transformer building blocks (pure-functional JAX).
+
+Conventions:
+  * params are pytrees of jnp arrays; layer stacks carry a leading L axis
+    and run under ``lax.scan`` (keeps HLO size O(1) in depth — essential
+    for compiling 80-layer configs against 512 host devices);
+  * activations: (batch, seq, d_model); attention inner: (batch, seq,
+    heads, head_dim);
+  * sharding is injected via ``with_sharding_constraint`` using the axis
+    names from ``repro.runtime.partition`` (no-ops outside a mesh);
+  * dtype policy: parameters/activations bf16, reductions & softmax fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.partition import MODEL as MODEL_AXIS, axis_size, shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def layernorm(x: jax.Array, g: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * lax.rsqrt(var + eps)).astype(x.dtype) * g + b
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,s,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    xr2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional bias — qwen-style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    impl: str = "full"        # full | chunked (online-softmax k-block scan)
+    chunk: int = 1024
+
+
+def attn_init(key, cfg: AttnCfg, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.head_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * cfg.head_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * cfg.head_dim,), dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def attention(p: Params, cfg: AttnCfg, x: jax.Array,
+              positions: jax.Array,
+              kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_len: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """GQA attention. Training: kv_cache None. Decode: x is the new token
+    block; kv_cache (k, v) of shape (b, S_max, n_kv, hd) is updated at
+    ``cache_len``."""
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _split_heads(q, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(k, cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(v, cfg.n_kv_heads, cfg.head_dim)
+    q = shard(q, P(("pod", "data"), None, "model", None))
+    k = shard(k, P(("pod", "data"), None, "model", None))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_len,
+                                             axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_len,
+                                             axis=1)
+        k_all, v_all = ck, cv
+        new_cache = (ck, cv)
+        kv_pos = (jnp.arange(ck.shape[1])[None, :]
+                  if kv_positions is None else kv_positions)
+        kv_len_mask = (jnp.arange(ck.shape[1])[None, :] < cache_len + s)
+    else:
+        k_all, v_all = k, v
+        new_cache = None
+        kv_pos = positions
+        kv_len_mask = None
+
+    # flat-head formulation: kv heads broadcast to the full head count so
+    # every intermediate shards cleanly as (batch, 'model'-heads, q, k) —
+    # the grouped 5-D form (kv x group) cannot shard 16-way when
+    # kv*group != 16k and triggers SPMD full rematerialization.
+    group = cfg.n_heads // cfg.n_kv_heads
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k_all, group, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v_all, group, axis=2).astype(jnp.float32)
+    # TP layout for attention intermediates: heads over 'model' when there
+    # are at least as many heads as shards (GSPMD pads 24->32 etc.; §Perf A1
+    # showed q-dim sharding triggers TB-scale backward all-gathers);
+    # q-dim (sequence-parallel) only when heads < shards (whisper's 8).
+    # Softmax reduces over k, which stays unsharded either way.
+    msize = max(axis_size(MODEL_AXIS), 1)
+    if cfg.n_heads % msize == 0 or cfg.n_heads >= msize:
+        attn_spec = P(("pod", "data"), "model", None, None)
+    else:
+        attn_spec = P(("pod", "data"), None, "model", None)
+
+    if cfg.impl == "chunked" and s > cfg.chunk:
+        # §Perf B: flash-style online-softmax over k blocks — the SxS
+        # logits/probs planes never exist at once, removing the dominant
+        # HBM term of full-attention training/prefill at long sequence.
+        # Cache-invalid key positions fold into the position mask.
+        sk = kf.shape[1]
+        kpos = jnp.broadcast_to(kv_pos, (b, sk)).astype(jnp.int32)
+        if kv_len_mask is not None:
+            kpos = jnp.where(jnp.broadcast_to(kv_len_mask, (b, sk)), kpos,
+                             jnp.iinfo(jnp.int32).max)
+        out = _chunked_attention(qf, kf, vf, positions, kpos,
+                                 1.0 / (cfg.head_dim ** 0.5), cfg.chunk,
+                                 attn_spec, cfg.causal)
+        out = out.reshape(b, s, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+        return out @ p["wo"], new_cache
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) / (cfg.head_dim ** 0.5)
+    logits = shard(logits, attn_spec)
+    if cfg.causal:
+        qpos = positions[..., :, None] if positions.ndim == 2 else positions[:, None]
+        causal_mask = (qpos[:, None, :, :] >= kv_pos[:, None, None, :])
+        logits = jnp.where(causal_mask, logits, -jnp.inf)
+    if kv_len_mask is not None:
+        logits = jnp.where(kv_len_mask[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = shard(probs, attn_spec)
+    # (§Perf B4 tried bf16 probs for the P·V contraction — REFUTED: the
+    # explicit convert added a full pass under XLA's fusion, +2% memory
+    # term. Kept fp32; see EXPERIMENTS.md §Perf.)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+    return out @ p["wo"], new_cache
+
+
+def _chunked_attention(qf, kf, vf, qpos, kpos, scale: float, blk: int,
+                       attn_spec: P, causal: bool) -> jax.Array:
+    """Online-softmax attention, scanning key/value blocks (XLA analogue of
+    kernels/flash_attention.py — compiles on every backend).
+
+    qf (b,sq,h,d) fp32; kf/vf (b,sk,h,d) fp32 (kv heads pre-broadcast);
+    qpos (b,sq); kpos (b,sk). Returns (b,sq,h,d) fp32.
+    """
+    b, sq, h, d = qf.shape
+    sk = kf.shape[1]
+    nb = -(-sk // blk)
+    pad = nb * blk - sk
+    kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=jnp.iinfo(
+        jnp.int32).max)      # padded keys never attend
+    ks = jnp.moveaxis(kf.reshape(b, nb, blk, h, d), 1, 0)
+    vs = jnp.moveaxis(vf.reshape(b, nb, blk, h, d), 1, 0)
+    kps = jnp.moveaxis(kpos.reshape(b, nb, blk), 1, 0)
+
+    acc_spec = P(attn_spec[0], attn_spec[1], attn_spec[2], None)
+
+    # remat the block body: without it, scan's backward pass stacks every
+    # block's probs — re-materializing exactly the SxS traffic chunking is
+    # meant to remove (§Perf B1 refuted the un-rematted version).
+    @jax.checkpoint
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, kpb = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb) * scale
+        s = shard(s, attn_spec)
+        mask = kpb[:, None, None, :] < jnp.iinfo(jnp.int32).max
+        if causal:
+            mask = mask & (qpos[:, None, :, None] >= kpb[:, None, None, :])
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p_ = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p_.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bkhd->bhqd", p_, vb)
+        acc = shard(acc, acc_spec)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (ks, vs, kps))
+    out = acc / jnp.maximum(l, 1e-30)
+    return jnp.moveaxis(out, 1, 2)            # (b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MlpCfg:
+    d_model: int
+    d_ff: int
+    activation: str = "swiglu"     # swiglu | gelu
+
+
+def mlp_init(key, cfg: MlpCfg, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {"wg": dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+                "wu": dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+                "wd": dense_init(ks[2], cfg.d_ff, cfg.d_model, dtype)}
+    return {"wu": dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+            "wd": dense_init(ks[1], cfg.d_ff, cfg.d_model, dtype)}
+
+
+def mlp(p: Params, cfg: MlpCfg, x: jax.Array) -> jax.Array:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu((x @ p["wg"]).astype(jnp.float32)).astype(x.dtype) \
+            * (x @ p["wu"])
+    else:
+        h = jax.nn.gelu((x @ p["wu"]).astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, P(("pod", "data"), None, "model"))
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# cross-entropy loss (vocab possibly sharded over 'model')
+# ---------------------------------------------------------------------------
+
+def xent_loss(logits: jax.Array, targets: jax.Array,
+              vocab: Optional[int] = None) -> jax.Array:
+    """Cross-entropy; columns >= ``vocab`` (embedding padding) are masked."""
+    lf = logits.astype(jnp.float32)
+    if vocab is not None and vocab < logits.shape[-1]:
+        cols = jnp.arange(logits.shape[-1])
+        lf = jnp.where(cols < vocab, lf, -1e30)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def mask_padded_vocab(logits: jax.Array, vocab: int) -> jax.Array:
+    if vocab >= logits.shape[-1]:
+        return logits
+    cols = jnp.arange(logits.shape[-1])
+    return jnp.where(cols < vocab, logits, jnp.asarray(-1e30, logits.dtype))

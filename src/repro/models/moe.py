@@ -1,0 +1,194 @@
+"""Mixture-of-Experts layer with capacity-based sort dispatch (EP-ready).
+
+Top-k routing -> sort-by-expert -> capacity-bounded scatter into an
+(E, C, D) dispatch tensor sharded over the 'model' axis (expert parallel)
+-> stacked-expert einsum -> weighted combine. Aux load-balancing loss per
+Shazeer et al. Overflowed tokens are dropped (capacity_factor bounds them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoESpec
+from repro.models import layers as L
+from repro.runtime.partition import shard
+
+
+def moe_init(key, d_model: int, d_ff: int, spec: MoESpec,
+             dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 6)
+    E = spec.n_experts
+    scale = (2.0 / (d_model + d_ff)) ** 0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, E), jnp.float32)
+                   * 0.02).astype(jnp.float32),
+        "w_experts_gate": (jax.random.normal(ks[1], (E, d_model, d_ff),
+                                             jnp.float32) * scale).astype(dtype),
+        "w_experts_up": (jax.random.normal(ks[2], (E, d_model, d_ff),
+                                           jnp.float32) * scale).astype(dtype),
+        "w_experts_down": (jax.random.normal(ks[3], (E, d_ff, d_model),
+                                             jnp.float32) * scale).astype(dtype),
+    }
+    if spec.shared_expert:
+        p["shared"] = L.mlp_init(ks[4], L.MlpCfg(d_model, d_ff), dtype)
+    return p
+
+
+def moe_apply(p: Dict, spec: MoESpec, d_ff: int, x: jax.Array,
+              impl: str = "gspmd") -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss). impl: 'gspmd' (global scatter,
+    baseline) or 'shard_map' (local dispatch + psum-combine EP — §Perf A2)."""
+    from repro.runtime.partition import axis_size, current_mesh
+    if impl == "shard_map" and current_mesh() is not None \
+            and axis_size("model") > 1:
+        return _moe_shard_map(p, spec, d_ff, x)
+    B, S, D = x.shape
+    N = B * S
+    E, k = spec.n_experts, spec.top_k
+    xf = x.reshape(N, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (N, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss: E * mean(density_e * mean_prob_e)
+    density = jnp.mean(
+        jax.nn.one_hot(gate_idx, E, dtype=jnp.float32).sum(1), axis=0)
+    aux = spec.aux_coef * E * jnp.mean(density * probs.mean(0))
+
+    # ---- sort-based capacity dispatch ----
+    C = max(int(spec.capacity_factor * N * k / E), 1)
+    flat_e = gate_idx.reshape(-1)                            # (N*k,)
+    flat_t = jnp.repeat(jnp.arange(N), k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position within each expert's run
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(N * k) - starts[se]
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, 0)
+
+    dispatch = jnp.zeros((E, C, D), dtype=x.dtype)
+    src = jnp.where(keep[:, None], xf[st], 0)
+    dispatch = dispatch.at[se, pos_c].add(src)
+    dispatch = shard(dispatch, P("model", "data", None))
+
+    h_g = jnp.einsum("ecd,edf->ecf", dispatch, p["w_experts_gate"])
+    h_u = jnp.einsum("ecd,edf->ecf", dispatch, p["w_experts_up"])
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    h = shard(h, P("model", "data", None))
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_experts_down"])
+
+    # ---- combine ----
+    gathered = eout[se, pos_c]                               # (N*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    contrib = gathered * sw[:, None].astype(x.dtype)
+    out = jnp.zeros((N, D), dtype=x.dtype).at[st].add(contrib)
+    out = out.reshape(B, S, D)
+
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], L.MlpCfg(D, d_ff), x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert parallelism (§Perf A2)
+#
+# The GSPMD scatter/gather formulation forces the partitioner to all-gather
+# the full (N*k, D) dispatch source on every expert shard and to all-reduce
+# full (N, D) buffers for the scatter-adds — TB-scale collectives per layer
+# (granite baseline: 610 s collective term). Here tokens stay local to their
+# data shard (they are already replicated across the model axis), each model
+# shard dispatches *locally* to its own expert slice, and the only
+# communication is one psum of the (N_loc, D) combined output over 'model' —
+# identical in shape to a dense Megatron-TP MLP reduction.
+# ---------------------------------------------------------------------------
+
+def _moe_shard_map(p: Dict, spec: MoESpec, d_ff: int, x: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    from jax.experimental.shard_map import shard_map
+    from repro.runtime.partition import axis_size, current_mesh
+    mesh = current_mesh()
+    names = tuple(mesh.axis_names)
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    msize = axis_size("model")
+    E, k = spec.n_experts, spec.top_k
+    E_pad = -(-E // msize) * msize
+    E_loc = E_pad // msize
+    B, S, D = x.shape
+
+    def padE(w):
+        return jnp.pad(w, ((0, E_pad - E),) + ((0, 0),) * (w.ndim - 1))
+
+    wg, wu, wd = padE(p["w_experts_gate"]), padE(p["w_experts_up"]), \
+        padE(p["w_experts_down"])
+    router = p["router"]
+
+    def local_fn(xl, router, wg, wu, wd):
+        midx = jax.lax.axis_index("model")
+        Bl, Sl, _ = xl.shape
+        N = Bl * Sl
+        xf = xl.reshape(N, D)
+        logits = xf.astype(jnp.float32) @ router            # (N, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+        density = jnp.mean(
+            jax.nn.one_hot(gate_idx, E, dtype=jnp.float32).sum(1), axis=0)
+        aux = spec.aux_coef * E * jnp.mean(density * probs.mean(0))
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+
+        C = max(int(spec.capacity_factor * N * k / E), 1)
+        flat_e = gate_idx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(N), k)
+        flat_w = gate_vals.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        counts = jnp.bincount(se, length=E_pad)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(N * k) - starts[se]
+        keep = pos < C
+        pos_c = jnp.where(keep, pos, 0)
+
+        dispatch = jnp.zeros((E_pad, C, D), dtype=x.dtype)
+        src = jnp.where(keep[:, None], xf[st], 0)
+        dispatch = dispatch.at[se, pos_c].add(src)
+        mine = jax.lax.dynamic_slice_in_dim(dispatch, midx * E_loc, E_loc, 0)
+
+        h_g = jnp.einsum("ecd,edf->ecf", mine, wg)
+        h_u = jnp.einsum("ecd,edf->ecf", mine, wu)
+        h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+        eout = jnp.einsum("ecf,efd->ecd", h, wd)             # (E_loc, C, D)
+
+        lo = midx * E_loc
+        in_range = (se >= lo) & (se < lo + E_loc) & keep
+        rows = eout[jnp.clip(se - lo, 0, E_loc - 1), pos_c]  # (N*k, D)
+        contrib = jnp.where(in_range[:, None], rows, 0) \
+            * sw[:, None].astype(x.dtype)
+        y = jnp.zeros((N, D), dtype=x.dtype).at[st].add(contrib)
+        y = jax.lax.psum(y, "model")
+        return y.reshape(Bl, Sl, D), aux
+
+    from jax.sharding import PartitionSpec as Ps
+    bspec = Ps(batch_axes if batch_axes else None, None, None)
+    out, aux = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(bspec, Ps(None, None), Ps("model", None, None),
+                  Ps("model", None, None), Ps("model", None, None)),
+        out_specs=(bspec, Ps()),
+        check_rep=False,
+    )(x, router, wg, wu, wd)
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], L.MlpCfg(D, d_ff), x)
+    return out, aux

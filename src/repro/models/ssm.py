@@ -1,0 +1,241 @@
+"""Mamba-2 (SSD — state-space duality) layer, chunked scan formulation.
+
+The strongest match for the paper's technique (DESIGN.md §4): SSD *is* a
+streaming recurrence with loop-carried state — per head h with state
+(P x N):    H_t = a_t * H_{t-1} + dt_t * (B_t ⊗ x_t) ;  y_t = C_t · H_t
+
+Training uses the chunked dual form (Dao & Gu 2024): within a chunk the
+quadratic 'attention-like' term runs on the MXU; across chunks a
+``lax.scan`` carries the state — the same split as the fabric's
+one-shot-body + loop-carried-feedback structure.
+
+Decode carries (conv_state, ssm_state) and costs O(1) per token — which is
+why mamba2/zamba2 are the only archs that run the 524k-decode cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SSMSpec
+from repro.runtime.partition import MODEL, shard
+
+
+def dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim, s.d_state
+
+
+def ssm_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Dict:
+    s = cfg.ssm
+    dI, H, convd, N = dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * dI + 2 * s.n_groups * N + H
+    scale = (2.0 / (cfg.d_model + d_in_proj)) ** 0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (cfg.d_model, d_in_proj),
+                                      jnp.float32) * scale).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, convd), jnp.float32)
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((convd,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "Dp": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_g": jnp.ones((dI,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (dI, cfg.d_model), jnp.float32)
+                     * scale).astype(dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    dI, H, _, N = dims(cfg)
+    G = s.n_groups
+    z, xBC, dt = jnp.split(zxbcdt, [dI, 2 * dI + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d over seq. xBC (B,S,C), w (K,C).
+    Returns (out, new_state) — state holds the last K-1 inputs."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i] for i in range(K))
+    new_state = full[:, -(K - 1):]
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xBC.dtype), new_state
+
+
+def ssm_forward(p: Dict, cfg: ArchConfig, x: jax.Array,
+                state: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """x: (B,S,D). state: (conv_state (B,K-1,convd), ssm (B,H,P,N)) for
+    decode; None for training (chunked scan from zero state)."""
+    s = cfg.ssm
+    dI, H, convd, N = dims(cfg)
+    Phd = s.head_dim
+    B, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    conv_state = state[0] if state is not None else None
+    xBC, new_conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                       conv_state)
+    xs, Bc, Cc = jnp.split(xBC, [dI, dI + s.n_groups * N], axis=-1)
+    xs = xs.reshape(B, S, H, Phd)
+    xs = shard(xs, P(("pod", "data"), None, "model", None))
+    Bc = Bc.reshape(B, S, s.n_groups, N)
+    Cc = Cc.reshape(B, S, s.n_groups, N)
+    # broadcast groups to heads
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bc, rep, axis=2)          # (B,S,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    dA = -jnp.exp(p["A_log"])[None, None, :] * dt                 # <= 0
+
+    if state is None:
+        y, last_state = _chunked_ssd(xs, Bh, Ch, dt, dA, s.chunk)
+    else:
+        h_prev = state[1]
+        a = jnp.exp(dA)[..., None, None]      # (B,S,H,1,1)
+        if B == 1:
+            # single-request long-context decode: the data axis would be
+            # idle; shard the head-channel (P) dim over it so the state
+            # update/read distributes across the whole pod (§Perf C1)
+            xs = shard(xs, P(None, None, MODEL, "data"))
+            h_prev = shard(h_prev, P(None, MODEL, "data", None))
+        # decode path: S is small (usually 1) — plain scan over S
+        def step(h, t):
+            ht = a[:, t, :, :, :] * h + (dt[:, t, :, None, None]
+                                         * xs[:, t, :, :, None]
+                                         * Bh[:, t, :, None, :])
+            yt = jnp.einsum("bhpn,bhn->bhp", ht, Ch[:, t])
+            return ht, yt
+        last_state, ys = lax.scan(step, h_prev, jnp.arange(S))
+        y = jnp.moveaxis(ys, 0, 1)            # (B,S,H,P)
+    y = y + p["Dp"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, dI).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+         ).astype(x.dtype) * p["norm_g"]
+    out = y @ p["out_proj"]
+    new_state = (new_conv_state, last_state)
+    return out, new_state
+
+
+def _chunked_ssd(xs, Bh, Ch, dt, dA, Q: int):
+    """Chunked dual form. xs (B,S,H,P), Bh/Ch (B,S,H,N), dt/dA (B,S,H).
+    Returns y (B,S,H,P) fp32 and the final state (B,H,P,N)."""
+    Bsz, S, H, Phd = xs.shape
+    N = Bh.shape[-1]
+    nC = S // Q
+    assert S % Q == 0, f"seq {S} % chunk {Q} != 0"
+    r = lambda t: t.reshape(Bsz, nC, Q, *t.shape[2:])
+    xc, Bc, Cc = r(xs.astype(jnp.float32)), r(Bh.astype(jnp.float32)), \
+        r(Ch.astype(jnp.float32))
+    dtc, dAc = r(dt), r(dA)
+    L = jnp.cumsum(dAc, axis=2)                       # (B,nC,Q,H)
+    # intra-chunk (attention-like) term; clamp masked (acausal) positions
+    # BEFORE exp — exp(+big) at masked slots otherwise turns into 0*inf=NaN
+    # in the backward pass (the classic where-grad trap).
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]  # (B,nC,Q,Q,H) log decay
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(mask, diff, -1e30))
+    decay = jnp.where(mask, decay, 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc) * decay
+    y_diag = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", scores, dtc, xc)
+    # chunk summary states: S_c = sum_j exp(L_last - L_j) dt_j B_j x_j^T
+    tail = jnp.exp(L[:, :, -1:, :] - L)               # (B,nC,Q,H)
+    S_c = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn", tail, dtc, Bc, xc)
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(L[:, :, -1, :])             # (B,nC,H)
+    def step(h, inp):
+        s_c, g = inp                                  # (B,H,P,N), (B,H)
+        h_new = g[:, :, None, None] * h + s_c
+        return h_new, h
+    h0 = jnp.zeros((Bsz, H, Phd, N), jnp.float32)
+    hT, h_prevs = lax.scan(step,
+                           h0,
+                           (jnp.moveaxis(S_c, 1, 0),
+                            jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)             # (B,nC,H,P,N) pre-chunk
+    y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                         jnp.exp(L), Cc, h_prevs)
+    y = (y_diag + y_inter).reshape(Bsz, S, H, Phd)
+    return y, hT
+
+
+def init_state(cfg: ArchConfig, batch: int):
+    s = cfg.ssm
+    dI, H, convd, N = dims(cfg)
+    return (jnp.zeros((batch, s.d_conv - 1, convd), cfg.jdtype),
+            jnp.zeros((batch, H, s.head_dim, N), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# full Mamba-2 language model (embed + scan of SSD blocks + tied head)
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ArchConfig) -> Dict:
+    from repro.models import layers as L
+    kl, ke = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+
+    def one(k):
+        return {"norm": jnp.ones((cfg.d_model,), cfg.jdtype),
+                "ssm": ssm_init(k, cfg, cfg.jdtype)}
+    return {"embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model, cfg.jdtype),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.jdtype),
+            "layers": jax.vmap(one)(layer_keys)}
+
+
+def lm_forward(params: Dict, cfg: ArchConfig,
+               tokens: jax.Array,
+               states: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """states: stacked per-layer (conv_state, ssm_state) for decode."""
+    from repro.models import layers as L
+    x = params["embed"][tokens]
+    x = shard(x, P(("pod", "data"), None, None))
+
+    def block(lp, x, st):
+        h, new_st = ssm_forward(lp["ssm"], cfg, L.rmsnorm(x, lp["norm"]), st)
+        return x + h, new_st
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    if states is None:
+        def body(x, lp):
+            x, _ = block(lp, x, None)
+            return x, None
+        x, _ = lax.scan(body, x, params["layers"])
+        new_states = None
+    else:
+        def body(x, scanned):
+            lp, st = scanned
+            x, nst = block(lp, x, st)
+            return x, nst
+        x, new_states = lax.scan(body, x, (params["layers"], states))
+
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = x @ params["embed"].T
+    logits = shard(logits, P(("pod", "data"), None, "model"))
+    return logits, new_states, jnp.zeros((), jnp.float32)
+
+
+def init_lm_states(cfg: ArchConfig, batch: int):
+    conv, ssm_st = init_state(cfg, batch)
+    Lc = cfg.n_layers
+    return (jnp.broadcast_to(conv[None], (Lc, *conv.shape)).copy(),
+            jnp.broadcast_to(ssm_st[None], (Lc, *ssm_st.shape)).copy())

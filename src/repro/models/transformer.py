@@ -1,0 +1,131 @@
+"""Dense / MoE decoder-only transformer (llama-family), scan-over-layers.
+
+Covers: minicpm-2b, internlm2-20b, qwen1.5-4b, yi-9b (dense),
+llama4-scout / granite (MoE via ``moe.py``), internvl2-76b (vlm: patch
+embeddings prepended to the token embeddings — frontend stubbed per the
+assignment).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.moe import moe_apply, moe_init
+from repro.runtime.partition import shard
+
+
+def _attn_cfg(cfg: ArchConfig) -> L.AttnCfg:
+    return L.AttnCfg(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                     cfg.qkv_bias, cfg.rope_theta,
+                     impl=cfg.attention_impl, chunk=cfg.attention_chunk)
+
+
+def _layer_init(key, cfg: ArchConfig) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": jnp.ones((cfg.d_model,), cfg.jdtype),
+         "ln2": jnp.ones((cfg.d_model,), cfg.jdtype),
+         "attn": L.attn_init(k1, _attn_cfg(cfg), cfg.jdtype)}
+    if cfg.moe is not None:
+        p["moe"] = moe_init(k2, cfg.d_model, cfg.d_ff, cfg.moe, cfg.jdtype)
+    else:
+        p["mlp"] = L.mlp_init(k2, L.MlpCfg(cfg.d_model, cfg.d_ff,
+                                           cfg.activation), cfg.jdtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Dict:
+    kl, ke, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    p = {"embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model, cfg.jdtype),
+         "final_norm": jnp.ones((cfg.d_model,), cfg.jdtype),
+         "layers": layers}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab_padded, cfg.jdtype)
+    return p
+
+
+def _block(cfg: ArchConfig, lp: Dict, x: jax.Array, positions: jax.Array,
+           cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+           cache_len: Optional[jax.Array] = None):
+    h, new_cache = L.attention(lp["attn"], _attn_cfg(cfg),
+                               L.rmsnorm(x, lp["ln1"]), positions,
+                               cache, cache_len)
+    x = x + h * cfg.residual_scale
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        h, aux = moe_apply(lp["moe"], cfg.moe, cfg.d_ff,
+                           L.rmsnorm(x, lp["ln2"]), impl=cfg.moe_impl)
+    else:
+        h = L.mlp(lp["mlp"], L.MlpCfg(cfg.d_model, cfg.d_ff, cfg.activation),
+                  L.rmsnorm(x, lp["ln2"]))
+    x = x + h * cfg.residual_scale
+    return x, new_cache, aux
+
+
+def forward(params: Dict, cfg: ArchConfig,
+            tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            caches: Optional[Tuple[jax.Array, jax.Array]] = None,
+            cache_len: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, Optional[Tuple], jax.Array]:
+    """Returns (logits, new_caches, aux_loss).
+
+    tokens (B, S) and/or embeds (B, P, D) — vlm prepends patch embeds.
+    caches: stacked (L, B, S_max, n_kv, hd) x2 for decode.
+    """
+    if tokens is not None:
+        x = params["embed"][tokens]
+        if cfg.tie_embeddings:
+            x = x * (cfg.d_model ** 0.5) if cfg.arch_id.startswith("minicpm") else x
+        if embeds is not None:
+            x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    else:
+        x = embeds
+    B, S, _ = x.shape
+    x = shard(x, P(("pod", "data"), None, None))
+    base = cache_len if cache_len is not None else 0
+    positions = base + jnp.arange(S)[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (B, S))
+
+    block = _block
+    if cfg.remat:
+        block = jax.checkpoint(_block, static_argnums=(0,))
+
+    if caches is None:
+        def body(carry, lp):
+            x, aux = carry
+            x, _, a = block(cfg, lp, x, positions)
+            return (x, aux + a), None
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+        new_caches = None
+    else:
+        def body(carry, scanned):
+            x, aux = carry
+            lp, (ck, cv) = scanned
+            x, nc, a = block(cfg, lp, x, positions, (ck, cv), cache_len)
+            return (x, aux + a), nc
+        (x, aux), new_caches = lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], caches))
+
+    x = L.rmsnorm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    logits = shard(logits, P(("pod", "data"), None, "model"))
+    return logits, new_caches, aux
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

@@ -1,0 +1,92 @@
+"""AdamW with cosine / WSD (warmup-stable-decay, MiniCPM) schedules.
+
+Self-contained (no optax): states are simple pytrees so the checkpoint
+layer and ZeRO-1 partitioning rules can treat them uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(jax.tree_util.tree_map(zeros, params),
+                          jax.tree_util.tree_map(zeros, params),
+                          jnp.zeros((), jnp.int32))
+
+    def update(self, grads: Any, state: AdamWState, params: Any
+               ) -> Tuple[Any, AdamWState]:
+        count = state.count + 1
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+        lr = self.lr(count)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * gf
+            v2 = self.b2 * v + (1 - self.b2) * gf * gf
+            step = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(new_m, new_v, count)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, base_lr * cos)
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup,
+    long flat stage, sharp (exponential-ish) decay tail."""
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        in_decay = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = base_lr * jnp.power(final_frac, in_decay)
+        return jnp.where(s < warmup, warm,
+                         jnp.where(s < warmup + stable, base_lr, dec))
+    return lr
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype),
+                                  grads), norm

@@ -1,0 +1,167 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = sum over collective ops of operand bytes /
+                 (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the post-SPMD optimized HLO text (``compiled.as_text()``),
+summing operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops. Ops inside loops/scans are scaled by
+the surrounding trip count when XLA's cost analysis exposes it through
+FLOPs (cost_analysis already includes loop trip counts; the HLO text parse
+multiplies by scan trip counts extracted from while-loop bounds).
+
+Hardware model: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per-chip aggregate egress on the bottleneck axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12         # bf16 per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all arrays in an HLO shape string like
+    'f32[128,256]' or '(bf16[2,4], f32[8])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _trip_count(body_name: str, text: str) -> int:
+    """Best-effort trip count for a while-body fusion (scan over layers)."""
+    # XLA names scan loops like "while.N"; trip counts show up in the
+    # buffer-assignment comments or the condition comparison constant.
+    m = re.search(
+        rf"{re.escape(body_name)}[\s\S]{{0,2000}}?compare\([^)]*\), "
+        rf"direction=LT[\s\S]{{0,200}}?constant\((\d+)\)", text)
+    return int(m.group(1)) if m else 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_type: Dict[str, int]
+    total_bytes: int
+    op_count: int
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in the optimized HLO,
+    scaling ops inside while-loop bodies by the loop trip count."""
+    by_type: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    count = 0
+
+    # map computation name -> trip count for while bodies
+    trip_of: Dict[str, int] = {}
+    for m in re.finditer(r"while\((.*?)\).*?body=([%\w.\-]+)", hlo_text):
+        body = m.group(2).lstrip("%")
+        trip_of.setdefault(body, 0)
+    # extract trip counts from known scan pattern: the condition compares
+    # an induction variable against a constant
+    for body in trip_of:
+        cond = body.replace("body", "cond")
+        cm = re.search(
+            rf"%?{re.escape(cond)}[\s\S]{{0,4000}}?direction=LT",
+            hlo_text)
+        tm = re.search(
+            rf"%?{re.escape(cond)}[\s\S]{{0,4000}}?s32\[\] constant\((\d+)\)",
+            hlo_text)
+        trip_of[body] = int(tm.group(1)) if (cm and tm) else 1
+
+    # attribute each op line to its enclosing computation
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        comp_m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->", line)
+        if comp_m and "{" in line:
+            current_comp = comp_m.group(1)
+        for cname in _COLLECTIVES:
+            token = f" {cname}("
+            alt = f"{cname}-start("
+            if token in line or alt in line or line.strip().startswith(cname):
+                # operand bytes: shapes on the LHS of the assignment
+                lhs = line.split("=")[0]
+                nbytes = _shape_bytes(lhs)
+                if nbytes == 0:
+                    nbytes = _shape_bytes(line)
+                mult = trip_of.get(current_comp, 1)
+                by_type[cname] += nbytes * max(mult, 1)
+                count += 1
+                break
+    return CollectiveStats(by_type, sum(by_type.values()), count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+
+    def useful_fraction(self) -> Optional[float]:
+        if self.model_flops is None or self.flops == 0:
+            return None
+        return self.model_flops / self.flops
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """How close the dominant term is to the best achievable given the
+        other two (1.0 = perfectly overlapped balanced execution)."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+
+def roofline_from_costs(flops: float, hbm_bytes: float,
+                        collective_bytes: float, chips: int,
+                        model_flops: Optional[float] = None) -> Roofline:
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (chips * HBM_BW)
+    coll_s = collective_bytes / (chips * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(flops, hbm_bytes, collective_bytes, chips, compute_s,
+                    memory_s, coll_s, bottleneck, model_flops)
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """6·N·D for one training step (fwd+bwd)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: float, tokens: float) -> float:
+    """2·N per generated token (weights read once, fwd only)."""
+    return 2.0 * n_params_active * tokens

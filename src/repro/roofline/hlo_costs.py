@@ -1,0 +1,443 @@
+"""Cost extraction from optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend does not scale
+while-loop bodies by their trip counts, which makes it useless for
+scan-over-layers models (it undercounts an 80-layer model 80x). This
+module re-derives the roofline inputs directly from the HLO text:
+
+  * **FLOPs** — every ``dot`` contributes 2 * prod(output dims) *
+    prod(contracting dims); loop bodies are scaled by their trip count
+    (parsed from the loop condition's comparison constant), nested loops
+    multiply; dots inside fusion computations are counted via recursion.
+  * **HBM bytes** — post-fusion HLO ops are the memory-transfer boundaries:
+    each non-trivial op contributes its output bytes plus its operands'
+    bytes (fusion internals excluded — they live in registers/VMEM).
+  * **Collective bytes** — by type, with the same loop scaling.
+
+All quantities are whole-program (global); per-chip division happens in
+``analysis.roofline_from_costs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ARR_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+# the opcode is the first lowercase-word-followed-by-'(' on the RHS (types
+# are always followed by '[', so shapes — even tuple shapes — never match)
+_OPCODE_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_COMP_HEAD_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _arrays(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _ARR_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _arrays(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str          # everything after the opening paren
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    ops: List[_Op]
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "iota", "after-all", "partition-id", "replica-id",
+               "reshape", "while", "conditional", "call"}
+
+
+class HLOCosts:
+    def __init__(self, text: str):
+        self.comps: Dict[str, _Comp] = {}
+        self.defs: Dict[Tuple[str, str], _Op] = {}   # (comp, op name) -> op
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._flops_memo: Dict[str, float] = {}
+        self._bytes_memo: Dict[str, float] = {}
+        self._coll_memo: Dict[str, Dict[str, float]] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[_Comp] = None
+        for raw in text.splitlines():
+            line = _COMMENT_RE.sub("", raw)
+            stripped = line.rstrip()
+            if stripped.endswith("{") and "->" in line:
+                cm = _COMP_HEAD_RE.match(line)
+                if cm:
+                    cur = _Comp(cm.group(2), [])
+                    self.comps[cur.name] = cur
+                    if cm.group(1):
+                        self.entry = cur.name
+                continue
+            if cur is None:
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            am = _ASSIGN_RE.match(line)
+            if not am:
+                continue
+            rhs = am.group(2)
+            om = _OPCODE_RE.search(rhs)
+            if not om:
+                continue
+            op = _Op(am.group(1), rhs[:om.start()].strip(), om.group(1),
+                     rhs[om.end():])
+            cur.ops.append(op)
+            self.defs[(cur.name, op.name)] = op
+
+    # ------------------------------------------------------------------
+    def _operands(self, op: _Op, comp: str) -> List[_Op]:
+        """Operand defs (only the argument list, not attribute refs)."""
+        args = op.rest.split("),")[0]
+        out = []
+        for m in _NAME_RE.finditer(args):
+            d = self.defs.get((comp, m.group(1)))
+            if d is not None:
+                out.append(d)
+        return out
+
+    def _attr_comp(self, op: _Op, attr: str) -> Optional[str]:
+        m = re.search(rf"{attr}=%?([\w.\-]+)", op.rest)
+        return m.group(1) if m else None
+
+    def _fusion_io_bytes(self, op: _Op, comp_name: str) -> float:
+        """HBM bytes of one fusion: output + operand reads, where operands
+        that are only dynamic-sliced/gathered inside the fusion count at
+        their *slice* size (scan-over-layers parameter stacks would
+        otherwise be charged at full size every trip — a 48-80x
+        overcount)."""
+        operands = self._operands(op, comp_name)
+        callee = self._attr_comp(op, "calls")
+        ccomp = self.comps.get(callee) if callee else None
+        if ccomp is None:
+            return float(_shape_bytes(op.shape)) + sum(
+                _shape_bytes(o.shape) for o in operands)
+        param_idx: Dict[str, int] = {}
+        for cop in ccomp.ops:
+            if cop.opcode == "parameter":
+                m = re.match(r"(\d+)", cop.rest)
+                if m:
+                    param_idx[cop.name] = int(m.group(1))
+        # alias map: convert/bitcast/copy/reshape of a param is transparent
+        # (XLA's CPU backend wraps in-place stack updates in full-tensor
+        # convert pairs that a TPU compile aliases away)
+        alias: Dict[str, str] = {p: p for p in param_idx}
+
+        def root(name: str) -> Optional[str]:
+            return alias.get(name)
+
+        for cop in ccomp.ops:
+            if cop.opcode in ("convert", "bitcast", "copy", "reshape"):
+                ins = self._operands(cop, ccomp.name)
+                if len(ins) == 1 and root(ins[0].name) is not None:
+                    alias[cop.name] = alias[ins[0].name]
+
+        slice_of: Dict[str, float] = {}
+        consumed_other: Dict[str, bool] = {}
+        dus_update_bytes = 0.0
+        has_dus_of_param = False
+        for cop in ccomp.ops:
+            if cop.opcode in ("convert", "bitcast", "copy", "reshape") \
+                    and cop.name in alias:
+                continue                      # transparent alias hop
+            if cop.opcode in ("dynamic-slice", "gather", "slice"):
+                ins = self._operands(cop, ccomp.name)
+                if ins and root(ins[0].name) is not None:
+                    nm = root(ins[0].name)
+                    slice_of[nm] = slice_of.get(nm, 0.0) + _shape_bytes(
+                        cop.shape)
+                    ins = ins[1:]
+                for o in ins:
+                    r = root(o.name)
+                    if r is not None:
+                        consumed_other[r] = True
+            elif cop.opcode == "dynamic-update-slice":
+                # in-place update: traffic = the update slice, not the full
+                # destination (XLA aliases scan stacking buffers) — the
+                # destination param is free, the update operand's size counts
+                ins = self._operands(cop, ccomp.name)
+                if ins and root(ins[0].name) is not None:
+                    has_dus_of_param = True
+                    if len(ins) > 1:
+                        dus_update_bytes += _shape_bytes(ins[1].shape)
+                        for o in ins[2:]:
+                            r = root(o.name)
+                            if r is not None:
+                                consumed_other[r] = True
+                else:
+                    for o in ins:
+                        r = root(o.name)
+                        if r is not None:
+                            consumed_other[r] = True
+            else:
+                for o in self._operands(cop, ccomp.name):
+                    r = root(o.name)
+                    if r is not None:
+                        consumed_other[r] = True
+        # output bytes: if this fusion is an in-place stack update, charge
+        # the written slice rather than the whole stacked output
+        total = dus_update_bytes if has_dus_of_param \
+            else float(_shape_bytes(op.shape))
+        for pname, idx in param_idx.items():
+            if pname in slice_of and not consumed_other.get(pname):
+                total += slice_of[pname]
+            elif has_dus_of_param and pname not in consumed_other \
+                    and pname not in slice_of:
+                continue            # the aliased DUS destination: free
+            elif idx < len(operands):
+                total += _shape_bytes(operands[idx].shape)
+        return total
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        const_vals: Dict[str, int] = {}
+        for op in comp.ops:
+            if op.opcode == "constant":
+                m = re.match(r"(\d+)", op.rest)
+                if m:
+                    const_vals[op.name] = int(m.group(1))
+        for op in comp.ops:
+            if op.opcode == "compare" and "direction=LT" in op.rest:
+                for m in _NAME_RE.finditer(op.rest.split("),")[0]):
+                    if m.group(1) in const_vals:
+                        return const_vals[m.group(1)]
+        # fall back: any constant in the cond
+        return max(const_vals.values(), default=1)
+
+    # ------------------------------------------------------------------
+    def flops(self, comp_name: Optional[str] = None) -> float:
+        comp_name = comp_name or self.entry
+        if comp_name in self._flops_memo:
+            return self._flops_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += self._dot_flops(op, comp_name)
+            elif op.opcode == "fusion":
+                callee = self._attr_comp(op, "calls")
+                if callee:
+                    total += self.flops(callee)
+            elif op.opcode == "while":
+                body = self._attr_comp(op, "body")
+                cond = self._attr_comp(op, "condition")
+                trips = self._trip_count(cond) if cond else 1
+                if body:
+                    total += self.flops(body) * max(trips, 1)
+            elif op.opcode in ("call", "conditional", "custom-call"):
+                callee = self._attr_comp(op, "calls") or \
+                    self._attr_comp(op, "to_apply")
+                if callee:
+                    total += self.flops(callee)
+        self._flops_memo[comp_name] = total
+        return total
+
+    def _dot_flops(self, op: _Op, comp: str) -> float:
+        out_arrays = _arrays(op.shape)
+        if not out_arrays:
+            return 0.0
+        out_elems = 1
+        for d in out_arrays[0][1]:
+            out_elems *= d
+        # contracting dims from the lhs operand
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        operands = self._operands(op, comp)
+        if not m or not operands:
+            return 2.0 * out_elems
+        lhs_arrays = _arrays(operands[0].shape)
+        if not lhs_arrays:
+            return 2.0 * out_elems
+        lhs_dims = lhs_arrays[0][1]
+        contract = 1
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+        return 2.0 * out_elems * contract
+
+    # ------------------------------------------------------------------
+    def hbm_bytes(self, comp_name: Optional[str] = None) -> float:
+        comp_name = comp_name or self.entry
+        if comp_name in self._bytes_memo:
+            return self._bytes_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = self._attr_comp(op, "body")
+                cond = self._attr_comp(op, "condition")
+                trips = self._trip_count(cond) if cond else 1
+                if body:
+                    total += self.hbm_bytes(body) * max(trips, 1)
+                continue
+            if op.opcode in ("call", "conditional"):
+                callee = self._attr_comp(op, "calls") or \
+                    self._attr_comp(op, "to_apply")
+                if callee:
+                    total += self.hbm_bytes(callee)
+                continue
+            if op.opcode in _SKIP_BYTES:
+                continue
+            # op output + operand reads (fusion internals excluded: only the
+            # fusion op itself appears here; dynamic-sliced stack operands
+            # count at slice size — see _fusion_io_bytes)
+            if op.opcode == "fusion":
+                total += self._fusion_io_bytes(op, comp_name)
+            elif op.opcode == "dynamic-update-slice":
+                ins = self._operands(op, comp_name)
+                if len(ins) > 1:     # in-place: write the slice only
+                    total += 2.0 * _shape_bytes(ins[1].shape)
+                else:
+                    total += _shape_bytes(op.shape)
+            else:
+                total += _shape_bytes(op.shape)
+                for operand in self._operands(op, comp_name):
+                    total += _shape_bytes(operand.shape)
+        self._bytes_memo[comp_name] = total
+        return total
+
+    # ------------------------------------------------------------------
+    def top_bytes(self, n: int = 15) -> List[Tuple[float, str, str]]:
+        """Largest HBM-byte contributors (bytes x loop trips, per chip) —
+        the §Perf diagnosis tool: tells you WHICH tensor traffic dominates."""
+        out: List[Tuple[float, str, str]] = []
+
+        def walk(comp_name: str, mult: float):
+            comp = self.comps.get(comp_name)
+            if comp is None:
+                return
+            for op in comp.ops:
+                if op.opcode == "while":
+                    body = self._attr_comp(op, "body")
+                    cond = self._attr_comp(op, "condition")
+                    trips = max(self._trip_count(cond) if cond else 1, 1)
+                    if body:
+                        walk(body, mult * trips)
+                    continue
+                if op.opcode in ("call", "conditional"):
+                    callee = self._attr_comp(op, "calls") or \
+                        self._attr_comp(op, "to_apply")
+                    if callee:
+                        walk(callee, mult)
+                    continue
+                if op.opcode in _SKIP_BYTES:
+                    continue
+                if op.opcode == "fusion":
+                    b = self._fusion_io_bytes(op, comp_name)
+                elif op.opcode == "dynamic-update-slice":
+                    ins = self._operands(op, comp_name)
+                    b = 2.0 * _shape_bytes(ins[1].shape) if len(ins) > 1 \
+                        else _shape_bytes(op.shape)
+                else:
+                    b = _shape_bytes(op.shape)
+                    for operand in self._operands(op, comp_name):
+                        b += _shape_bytes(operand.shape)
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                out.append((b * mult, op.opcode,
+                            meta.group(1)[:90] if meta else op.name[:60]))
+
+        walk(self.entry, 1.0)
+        out.sort(key=lambda t: -t[0])
+        return out[:n]
+
+    def top_collectives(self, n: int = 12) -> List[Tuple[float, str, str]]:
+        """Largest collectives (bytes x trips, per chip) with provenance."""
+        out: List[Tuple[float, str, str]] = []
+
+        def walk(comp_name: str, mult: float):
+            comp = self.comps.get(comp_name)
+            if comp is None:
+                return
+            for op in comp.ops:
+                base = op.opcode.replace("-start", "")
+                if base in COLLECTIVES:
+                    meta = re.search(r'op_name="([^"]*)"', op.rest)
+                    out.append((_shape_bytes(op.shape) * mult, base,
+                                meta.group(1)[:90] if meta else op.name[:60]))
+                elif op.opcode == "while":
+                    body = self._attr_comp(op, "body")
+                    cond = self._attr_comp(op, "condition")
+                    trips = max(self._trip_count(cond) if cond else 1, 1)
+                    if body:
+                        walk(body, mult * trips)
+                elif op.opcode in ("fusion", "call", "conditional"):
+                    callee = self._attr_comp(op, "calls") or \
+                        self._attr_comp(op, "to_apply")
+                    if callee:
+                        walk(callee, mult)
+
+        walk(self.entry, 1.0)
+        out.sort(key=lambda t: -t[0])
+        return out[:n]
+
+    # ------------------------------------------------------------------
+    def collective_bytes(self, comp_name: Optional[str] = None
+                         ) -> Dict[str, float]:
+        comp_name = comp_name or self.entry
+        if comp_name in self._coll_memo:
+            return self._coll_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        out = {c: 0.0 for c in COLLECTIVES}
+        if comp is None:
+            return out
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                out[base] += _shape_bytes(op.shape)
+            elif op.opcode == "while":
+                body = self._attr_comp(op, "body")
+                cond = self._attr_comp(op, "condition")
+                trips = max(self._trip_count(cond) if cond else 1, 1)
+                if body:
+                    for k, v in self.collective_bytes(body).items():
+                        out[k] += v * trips
+            elif op.opcode in ("fusion", "call", "conditional"):
+                callee = self._attr_comp(op, "calls") or \
+                    self._attr_comp(op, "to_apply")
+                if callee:
+                    for k, v in self.collective_bytes(callee).items():
+                        out[k] += v
+        self._coll_memo[comp_name] = out
+        return out

@@ -1,0 +1,299 @@
+"""Partitioning rules: DP / TP / EP / SP sharding specs for params,
+optimizer state, activations and caches.
+
+Mesh axes (launch/mesh.py):
+    single-pod:  ("data", "model")            = (16, 16)
+    multi-pod:   ("pod", "data", "model")     = (2, 16, 16)
+
+Default layout (Megatron-style TP over 'model', DP over 'pod'+'data'):
+  * attention/MLP in-projections: output dim over 'model'
+  * out-projections: input dim over 'model'
+  * embeddings / lm head: vocab over 'model'
+  * MoE expert stacks: expert dim over 'model' (EP)
+  * activations: batch over ('pod','data'); heads / ff over 'model'
+  * KV caches: batch over ('pod','data'), kv heads over 'model'
+  * optimizer moments: parameter spec + ZeRO-1 extra sharding of the
+    leading (layer-stack) axis over 'data' where divisible.
+
+GSPMD handles non-divisible dimensions by padding, so configs whose head
+counts don't divide 16 (qwen 20H, minicpm 36H) still compile; balance is a
+perf-iteration concern (§Perf), not a correctness one.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# axis aliases
+BATCH_AXES = ("pod", "data")
+MODEL = "model"
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def _mesh_axis_names() -> tuple:
+    m = current_mesh()
+    return tuple(m.axis_names) if m is not None else ()
+
+
+def filter_spec(spec: P, names: tuple) -> P:
+    """Drop axis names not present in ``names`` (lets the same spec serve
+    1-device CPU, single-pod and multi-pod meshes)."""
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, (tuple, list)):
+            keep = tuple(a for a in entry if a in names)
+            out.append(keep if keep else None)
+        else:
+            out.append(entry if entry in names else None)
+    return P(*out)
+
+
+def _filter_spec(spec: P) -> Optional[P]:
+    names = _mesh_axis_names()
+    if not names:
+        return None
+    return filter_spec(spec, names)
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis in the ambient mesh (1 if absent)."""
+    m = current_mesh()
+    if m is None:
+        return 1
+    return dict(zip(m.axis_names, m.devices.shape)).get(name, 1)
+
+
+def shard(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint that no-ops outside a mesh context."""
+    fspec = _filter_spec(spec)
+    if fspec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, fspec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# parameter partitioning rules (by param-tree path name conventions)
+# ---------------------------------------------------------------------------
+
+_RULES = (
+    # (name match, spec for the trailing dims — leading stack axis prepended)
+    ("wq", P(None, MODEL)),
+    ("wk", P(None, MODEL)),
+    ("wv", P(None, MODEL)),
+    ("wo", P(MODEL, None)),
+    ("wg", P(None, MODEL)),
+    ("wu", P(None, MODEL)),
+    ("wd", P(MODEL, None)),
+    ("bq", P(MODEL)),
+    ("bk", P(MODEL)),
+    ("bv", P(MODEL)),
+    ("w_experts_up", P(MODEL, None, None)),      # (E, D, F): EP over experts
+    ("w_experts_gate", P(MODEL, None, None)),
+    ("w_experts_down", P(MODEL, None, None)),
+    ("router", P(None, MODEL)),
+    ("embed", P(MODEL, None)),                   # (V, D): vocab-sharded
+    ("lm_head", P(None, MODEL)),                 # (D, V)
+    ("in_proj", P(None, MODEL)),                 # mamba projections
+    ("out_proj", P(MODEL, None)),
+    ("conv_w", P(None, MODEL)),                  # (ksize, channels)
+    ("pos_embed", P(None, None)),
+)
+
+
+# production mesh axis sizes (dryrun/train target); GSPMD pads *internal*
+# shardings, but pjit *input* shardings must divide evenly, so specs are
+# validated against these sizes + the leaf shape and repaired when needed.
+MESH_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _entry_size(entry, sizes) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(entry, 1)
+
+
+def fix_spec(spec: P, shape, sizes=None) -> P:
+    """Drop spec entries whose mesh extent doesn't divide the dim; if the
+    'model' axis was dropped, re-place it on the largest divisible free dim
+    (e.g. granite's 40-expert stack moves EP's 'model' onto the FF dim)."""
+    sizes = sizes or MESH_SIZES
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    entries = entries[:len(shape)]
+    dropped_model = False
+    for i, e in enumerate(entries):
+        if e is None:
+            continue
+        if shape[i] % _entry_size(e, sizes) != 0:
+            has_model = e == MODEL or (isinstance(e, (tuple, list))
+                                       and MODEL in e)
+            dropped_model = dropped_model or has_model
+            entries[i] = None
+    flat = [a for e in entries if e is not None
+            for a in (e if isinstance(e, (tuple, list)) else (e,))]
+    if dropped_model and MODEL not in flat:
+        cands = sorted((i for i, e in enumerate(entries)
+                        if e is None and shape[i] % sizes[MODEL] == 0),
+                       key=lambda i: -shape[i])
+        if cands:
+            entries[cands[0]] = MODEL
+    return P(*entries)
+
+
+def spec_for(path: str, ndim: int, stacked: bool,
+             shape=None) -> P:
+    """Sharding spec for a parameter given its tree path (+shape repair)."""
+    leaf = path.split("/")[-1]
+    spec = P(*([None] * ndim))
+    for name, rule in _RULES:
+        if leaf == name or leaf.startswith(name):
+            entries = list(rule)
+            # pad/truncate to the param rank (minus stack axis)
+            want = ndim - (1 if stacked else 0)
+            while len(entries) < want:
+                entries.append(None)
+            entries = entries[:want]
+            if stacked:
+                entries = [None] + entries
+            spec = P(*entries)
+            break
+    if shape is not None:
+        spec = fix_spec(spec, shape)
+    return spec
+
+
+def tree_paths(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    """Flatten a params dict-tree into path->leaf."""
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(tree_paths(v, f"{prefix}/{k}" if prefix else k))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def param_specs(params: Any, stacked_prefixes: tuple = ("layers",)) -> Any:
+    """PartitionSpec tree matching ``params``'s structure."""
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        stacked = any(prefix.startswith(sp) or f"/{sp}" in f"/{prefix}"
+                      for sp in stacked_prefixes)
+        return spec_for(prefix, tree.ndim, stacked, tuple(tree.shape))
+    return walk(params)
+
+
+def batch_specs(batch_tree: Any, global_batch: int) -> Any:
+    """Shardings for input batches: batch dim over ('pod','data')."""
+    baxes = BATCH_AXES if global_batch > 1 else None
+
+    def spec(x):
+        entries = [baxes] + [None] * (x.ndim - 1)
+        return P(*entries)
+    return jax.tree_util.tree_map(spec, batch_tree)
+
+
+def decode_state_specs(cfg, shape, state_tree: Any) -> Any:
+    """Sharding specs for decode state (KV caches / SSM states).
+
+    Long-context single-request decode (global_batch == 1) shards the KV
+    *sequence* over 'data' (sequence parallelism); otherwise batch goes
+    over ('pod','data') and kv-heads/channels over 'model'.
+    """
+    fam = cfg.family
+    long_seq = shape.global_batch == 1
+    b = None if long_seq else BATCH_AXES
+    msize = MESH_SIZES[MODEL]
+
+    def kv_spec(x):
+        # (L_or_sites, B, S, n_kv, hd): kv heads over 'model' when they
+        # divide, else head_dim over 'model' (row-parallel attention);
+        # single-request long-context shards the KV sequence over 'data'.
+        seq = "data" if long_seq else None
+        if cfg.n_kv_heads % msize == 0:
+            return P(None, b, seq, MODEL, None)
+        return P(None, b, seq, None, MODEL)
+
+    def spec_leaf(x):
+        nd = x.ndim
+        if nd == 5 and fam in ("dense", "moe", "vlm", "audio", "hybrid"):
+            return kv_spec(x)
+        if fam in ("ssm", "hybrid"):
+            if nd == 4:            # conv state (L, B, K-1, convd)
+                return P(None, b, None, MODEL)
+            if nd == 5:            # ssm state (L, B, H, P, N)
+                return P(None, b, MODEL, None, None)
+        if nd == 3:                # enc_out (B, T, D)
+            return P(b, None, None)
+        return P(*([None] * nd))
+
+    def walk(t):
+        if isinstance(t, tuple):
+            return tuple(walk(v) for v in t)
+        if isinstance(t, list):
+            return [walk(v) for v in t]
+        if isinstance(t, dict):
+            return {k: walk(v) for k, v in t.items()}
+        return spec_leaf(t)
+
+    # ssm states distinguish conv (nd=4) vs ssm (nd=5) — fix family quirk.
+    # Long-context single-request decode additionally shards the SSM state's
+    # head-channel dim over 'data' (with batch=1 the data axis is otherwise
+    # idle and every data row replicates the whole recurrence — §Perf C1).
+    ssm_spec = (P(None, b, MODEL, "data", None) if long_seq
+                else P(None, b, MODEL, None, None))
+    if fam == "ssm":
+        conv, ssm_st = state_tree
+        return (P(None, b, None, MODEL), ssm_spec)
+    if fam == "hybrid":
+        (conv, ssm_st), (kc, vc) = state_tree
+        return ((P(None, b, None, MODEL), ssm_spec),
+                (kv_spec(kc), kv_spec(vc)))
+    return walk(state_tree)
+
+
+def zero1_specs(params: Any, data_axis: str = "data",
+                stacked_prefixes: tuple = ("layers",)) -> Any:
+    """Optimizer-moment specs (ZeRO-1): the parameter spec plus an extra
+    sharding of some free, evenly-divisible dim over the data axis —
+    preferring the leading (layer-stack) axis, falling back to any other
+    dim. Tensors with no divisible free dim stay at the parameter spec
+    (only small norms/scalars in practice)."""
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        stacked = any(prefix.startswith(sp) or f"/{sp}" in f"/{prefix}"
+                      for sp in stacked_prefixes)
+        shape = tuple(tree.shape)
+        base = spec_for(prefix, tree.ndim, stacked, shape)
+        entries = list(base) + [None] * (tree.ndim - len(base))
+        dsize = MESH_SIZES[data_axis]
+        # candidate dims: prefer dim 0, then largest
+        order = [0] + sorted(range(1, tree.ndim), key=lambda i: -shape[i])
+        for i in order:
+            if i < len(entries) and entries[i] is None \
+                    and shape[i] % dsize == 0:
+                entries[i] = data_axis
+                break
+        return P(*entries)
+    return walk(params)

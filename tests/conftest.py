@@ -1,0 +1,8 @@
+"""Test configuration: make the repo root importable (for ``benchmarks``)
+so the canonical ``PYTHONPATH=src pytest tests/`` invocation works."""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)

@@ -1,0 +1,173 @@
+"""DFG IR + functional-executor tests, including hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dfg as D
+from repro.core import kernels_lib as K
+from repro.core.executor import execute, wrap32
+from repro.core.isa import AluOp, CmpOp
+
+rng = np.random.default_rng(0)
+
+
+def test_validation_catches_missing_operands():
+    b = D.DFG.build("bad")
+    x = b.inp("x")
+    b._add(D.Node("m", D.MUX))          # no operands at all
+    b.out("out", "m")
+    with pytest.raises(ValueError):
+        b.done()
+
+
+def test_validation_catches_cycles():
+    b = D.DFG.build("cyc")
+    x = b.inp("x")
+    a = b.alu("a", AluOp.ADD, x, None)
+    c = b.alu("c", AluOp.ADD, a)
+    b.edge(c, a, "b")                   # forward cycle (not a back edge)
+    b.out("out", c)
+    with pytest.raises(ValueError):
+        b.done()
+
+
+def test_relu_semantics():
+    g = K.relu()
+    x = rng.integers(-(1 << 20), 1 << 20, 500).astype(np.int32)
+    out = execute(g, {"x": x})["out"]
+    assert np.array_equal(out, np.maximum(x, 0))
+
+
+def test_fft_butterfly_semantics():
+    wr, wi = 23170, -23170
+    g = K.fft_butterfly(wr, wi)
+    ins = {k: rng.integers(-(1 << 12), 1 << 12, 128).astype(np.int32)
+           for k in ("ar", "ai", "br", "bi")}
+    out = execute(g, ins)
+    ar, ai = ins["ar"].astype(np.int64), ins["ai"].astype(np.int64)
+    br, bi = ins["br"].astype(np.int64), ins["bi"].astype(np.int64)
+    tr = br * wr - bi * wi
+    ti = br * wi + bi * wr
+    assert np.array_equal(out["out_or0"], wrap32(ar + tr))
+    assert np.array_equal(out["out_oi1"], wrap32(ai - ti))
+
+
+def test_dither_error_diffusion():
+    g = K.dither()
+    x = rng.integers(0, 256, 300).astype(np.int32)
+    out = execute(g, {"x": x})["out"]
+    # reference Floyd-Steinberg-style 1-D diffusion
+    err, exp = 0, []
+    for px in x:
+        v = int(px) + err
+        o = 255 if v > 127 else 0
+        exp.append(o)
+        err = v - o
+    assert np.array_equal(out, np.array(exp, np.int32))
+
+
+def test_find2min_variants_agree():
+    x = rng.integers(0, 1 << 16, 777).astype(np.int32)
+    o1 = execute(K.find2min(), {"x": x})
+    o2 = execute(K.find2min_brmg(), {"x": x})
+    srt = np.sort(x)
+    assert o1["out_m1"][0] == srt[0] and o1["out_m2"][0] == srt[1]
+    assert o2["out_m1"][0] == srt[0] and o2["out_m2"][0] == srt[1]
+    # indices from the mux variant
+    assert x[o1["out_i1"][0]] == srt[0]
+
+
+def test_mac3_segmented_reduction():
+    g = K.mac3(8)
+    a = rng.integers(-100, 100, 32).astype(np.int32)
+    bs = {f"b{k}": rng.integers(-100, 100, 32).astype(np.int32)
+          for k in range(3)}
+    out = execute(g, {"a": a, **bs})
+    for k in range(3):
+        seg = (a.astype(np.int64) * bs[f"b{k}"].astype(np.int64)
+               ).reshape(4, 8).sum(1)
+        assert np.array_equal(out[f"out{k}"], wrap32(seg))
+
+
+def test_unroll_independent_lanes():
+    g = D.unroll(K.relu(), 3)
+    assert len(g.inputs) == 3 and len(g.outputs) == 3
+    x = rng.integers(-50, 50, 30).astype(np.int32)
+    out = execute(g, {"x@0": x[0::3], "x@1": x[1::3], "x@2": x[2::3]})
+    merged = np.empty(30, np.int32)
+    for k in range(3):
+        merged[k::3] = out[f"out@{k}"]
+    assert np.array_equal(merged, np.maximum(x, 0))
+
+
+def test_unroll_chained_matches_serial():
+    g2 = D.unroll_chained(K.dither(), 2)
+    x = rng.integers(0, 256, 400).astype(np.int32)
+    out = execute(g2, {"x@0": x[0::2], "x@1": x[1::2]})
+    ref = execute(K.dither(), {"x": x})["out"]
+    merged = np.empty(400, np.int32)
+    merged[0::2] = out["out@0"]
+    merged[1::2] = out["out@1"]
+    assert np.array_equal(merged, ref)
+
+
+def test_int32_wraparound():
+    b = D.DFG.build("wrap")
+    x = b.inp("x")
+    m = b.alu("m", AluOp.MUL, x, x)
+    b.out("out", m)
+    g = b.done()
+    x = np.array([1 << 20, -(1 << 20)], np.int32)
+    out = execute(g, {"x": x})["out"]
+    assert np.array_equal(out, wrap32(x.astype(np.int64) ** 2))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+_ALU_OPS = [AluOp.ADD, AluOp.SUB, AluOp.MUL, AluOp.AND, AluOp.OR, AluOp.XOR]
+
+
+def _random_elementwise_dfg(draw):
+    n_in = draw(st.integers(1, 3))
+    n_ops = draw(st.integers(1, 6))
+    b = D.DFG.build("rand")
+    avail = [b.inp(f"x{i}") for i in range(n_in)]
+    for i in range(n_ops):
+        op = draw(st.sampled_from(_ALU_OPS))
+        a = draw(st.sampled_from(avail))
+        use_const = draw(st.booleans())
+        if use_const:
+            node = b.alu(f"n{i}", op, a,
+                         const_b=draw(st.integers(-1000, 1000)))
+        else:
+            node = b.alu(f"n{i}", op, a, draw(st.sampled_from(avail)))
+        avail.append(node)
+    b.out("out", avail[-1])
+    return b.done()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_property_vectorized_equals_loop(data):
+    """The vectorized executor path must equal the token-by-token path."""
+    from repro.core import executor as E
+    g = _random_elementwise_dfg(data.draw)
+    n = data.draw(st.integers(1, 40))
+    ins = {name: np.array(data.draw(
+        st.lists(st.integers(-2**31, 2**31 - 1), min_size=n, max_size=n)),
+        dtype=np.int64).astype(np.int32) for name in g.inputs}
+    vec = E._execute_vectorized(g, {k: v.astype(np.int32) for k, v in ins.items()}, n)
+    loop = E._execute_loop(g, {k: np.asarray(v, np.int64) for k, v in ins.items()}, n)
+    for k in g.outputs:
+        assert np.array_equal(vec[k], loop[k]), k
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_property_wrap32_matches_c_semantics(a, b):
+    ai, bi = a - 2**31, b - 2**31
+    got = int(wrap32(np.int64(ai) + np.int64(bi)))
+    exp = ((ai + bi + 2**31) % 2**32) - 2**31   # two's-complement wrap
+    assert got == exp

@@ -1,0 +1,61 @@
+"""ISA/configuration-word unit tests (paper Sec. III-C / V-B / V-C)."""
+import random
+
+from repro.core import isa
+
+
+def test_bit_budget_matches_paper():
+    # 146 functional + 6 id = the paper's 152-bit word (Sec. V-B), + 6
+    # clock-gating bits = 158 (Sec. V-C), streamed as five 32-bit words
+    assert isa.FUNC_BITS == 146
+    assert isa.ID_BITS == 6
+    assert isa.GATE_BITS == 6
+    assert isa.TOTAL_BITS == 158
+    assert isa.WORDS_PER_PE == 5
+    assert isa.WORDS_PER_PE * 32 >= isa.TOTAL_BITS
+
+
+def test_config_roundtrip_defaults():
+    cfg = isa.PEConfig(pe_id=13, gate_mask=0b101010)
+    words = cfg.to_words()
+    back = isa.PEConfig.from_words(words)
+    assert back == cfg
+
+
+def test_config_roundtrip_random():
+    rng = random.Random(0)
+    for _ in range(50):
+        cfg = isa.PEConfig(
+            alu_op=isa.AluOp(rng.randrange(len(isa.AluOp))),
+            alu_fb_imm=rng.randrange(2),
+            cmp_op=isa.CmpOp(rng.randrange(len(isa.CmpOp))),
+            jm_mode=isa.JoinMergeMode(rng.randrange(3)),
+            out_mux=isa.OutMux(rng.randrange(3)),
+            data_reg_init=rng.randrange(1 << 32),
+            valid_reg_init=rng.randrange(8),
+            fu_fork_mask=rng.randrange(64),
+            valid_delay=rng.randrange(64),
+            in_a_sel=isa.OperandSel(rng.randrange(6)),
+            in_b_sel=isa.OperandSel(rng.randrange(6)),
+            ctrl_sel=isa.CtrlSel(rng.randrange(4)),
+            const_val=rng.randrange(1 << 32),
+            in_fork_mask_n=rng.randrange(64),
+            out_sel_s=isa.OutSel(rng.randrange(7)),
+            branch_swap=rng.randrange(2),
+            pe_id=rng.randrange(64),
+            gate_mask=rng.randrange(64),
+        )
+        assert isa.PEConfig.from_words(cfg.to_words()) == cfg
+
+
+def test_config_cycles_match_table_i():
+    # Table I: fft/find2min use 16 PEs -> 84 cycles; relu/dither 14 -> 74
+    assert isa.config_cycles(16) == 84
+    assert isa.config_cycles(14) == 74
+
+
+def test_config_stream_word_count():
+    cfgs = [isa.PEConfig(pe_id=i) for i in range(7)]
+    stream = isa.config_stream(cfgs)
+    assert len(stream) == 7 * isa.WORDS_PER_PE
+    assert all(0 <= w < (1 << 32) for w in stream)

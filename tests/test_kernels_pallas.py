@@ -1,0 +1,118 @@
+"""Pallas kernel tests: interpret-mode execution vs pure-jnp oracles,
+with hypothesis shape/dtype sweeps (per-kernel allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kernels_lib as K
+from repro.kernels import ref
+from repro.kernels.fabric_stream import fabric_stream
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.stream_conv2d import stream_conv2d
+from repro.kernels.stream_matmul import stream_matmul
+
+rng = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# fabric_stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("maker,names", [
+    (K.relu, ("x",)),
+    (K.fft_butterfly, ("ar", "ai", "br", "bi")),
+    (lambda: K.axpby(3, 5), ("x", "y")),
+    (lambda: K.scale_add(7), ("x", "y")),
+    (K.vadd, ("x", "y")),
+])
+def test_fabric_stream_matches_oracle(maker, names):
+    g = maker()
+    for n in (1, 127, 1024, 3000):
+        ins = {k: jnp.asarray(rng.integers(-10000, 10000, n), jnp.int32)
+               for k in names}
+        got = fabric_stream(g, ins)
+        want = ref.eval_dfg_elementwise(g, ins)
+        for k in want:
+            assert np.array_equal(np.asarray(got[k]), np.asarray(want[k])), k
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 2000), block_rows=st.sampled_from([1, 2, 8]))
+def test_property_fabric_stream_relu(n, block_rows):
+    g = K.relu()
+    x = jnp.asarray(rng.integers(-(2**31), 2**31 - 1, n, dtype=np.int64)
+                    .astype(np.int32))
+    got = fabric_stream(g, {"x": x}, block_rows=block_rows)["out"]
+    assert np.array_equal(np.asarray(got), np.maximum(np.asarray(x), 0))
+
+
+# ---------------------------------------------------------------------------
+# stream_matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_property_stream_matmul(m, k, n, dtype):
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype=dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype=dtype)
+    got = stream_matmul(a, b, bm=128, bn=128, bk=128)
+    want = ref.matmul(a, b)
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_stream_matmul_small_blocks():
+    a = jnp.asarray(rng.standard_normal((70, 90)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((90, 50)), jnp.float32)
+    got = stream_matmul(a, b, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul(a, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# stream_conv2d
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.integers(3, 64), w=st.integers(3, 200),
+       block_rows=st.sampled_from([1, 4, 8]))
+def test_property_stream_conv2d(h, w, block_rows):
+    img = jnp.asarray(rng.standard_normal((h, w)), jnp.float32)
+    kern = jnp.asarray(rng.standard_normal((3, 3)), jnp.float32)
+    got = stream_conv2d(img, kern, block_rows=block_rows)
+    want = ref.conv2d_3x3(img, kern)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.integers(1, 4), sq=st.integers(1, 200), sk=st.integers(1, 200),
+       d=st.sampled_from([16, 64, 80]), causal=st.booleans())
+def test_property_flash_attention(h, sq, sk, d, causal):
+    if causal and sq > sk:
+        sq = sk          # causal with more queries than keys is undefined here
+    q = jnp.asarray(rng.standard_normal((h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((h, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((h, sk, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_long_kv_blocks():
+    q = jnp.asarray(rng.standard_normal((2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 1000, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 1000, 64)), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, bq=128, bk=256)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
