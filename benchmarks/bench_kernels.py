@@ -5,9 +5,14 @@ kernel are *correctness* artifacts (interpret mode is a Python interpreter,
 not a performance path); the TPU-side expectation is the analytic roofline
 estimate printed per kernel (bytes-bound streaming for fabric_stream,
 MXU-bound for stream_matmul).
+
+``--frontend traced`` swaps the hand-built ``kernels_lib`` DFGs for graphs
+traced from plain Python by ``repro.frontend`` — same fabric semantics,
+zero hand assembly.
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import List
 
@@ -18,6 +23,20 @@ import numpy as np
 from repro.core import kernels_lib as K
 from repro.kernels import ops, ref
 from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+def _fft_dfg(frontend: str, n: int):
+    if frontend == "hand":
+        return K.fft_butterfly()
+    from repro.frontend import trace
+    wr, wi = 23170, -23170
+
+    def fft(ar, ai, br, bi):
+        tr = br * wr - bi * wi
+        ti = br * wi + bi * wr
+        return ar + tr, ai + ti, ar - tr, ai - ti
+
+    return trace(fft, n, name="fft")
 
 
 def _time(fn, *args, reps=5) -> float:
@@ -31,19 +50,19 @@ def _time(fn, *args, reps=5) -> float:
     return (time.perf_counter() - t0) / reps * 1e6   # us
 
 
-def run() -> List[dict]:
+def run(frontend: str = "hand") -> List[dict]:
     rng = np.random.default_rng(0)
     rows = []
 
     # fabric_stream on the fft butterfly (one-shot engine)
-    g = K.fft_butterfly()
     n = 1 << 16
+    g = _fft_dfg(frontend, n)
     ins = {k: jnp.asarray(rng.integers(-4096, 4096, n).astype(np.int32))
-           for k in ("ar", "ai", "br", "bi")}
+           for k in g.inputs}
     ref_fn = jax.jit(lambda d: ref.eval_dfg_elementwise(g, d))
     us_ref = _time(ref_fn, ins)
     stream_bytes = 8 * n * 4                       # 4 in + 4 out streams
-    rows.append({"kernel": "fabric_stream(fft)", "n": n,
+    rows.append({"kernel": f"fabric_stream(fft/{frontend})", "n": n,
                  "us_xla_cpu": us_ref,
                  "tpu_roofline_us": stream_bytes / HBM_BW * 1e6,
                  "note": "bandwidth-bound streaming; one HBM round-trip"})
@@ -81,8 +100,13 @@ def run() -> List[dict]:
 
 
 def main() -> None:
-    for r in run():
-        print(f"{r['kernel']:22s} n={r['n']:6d} xla_cpu={r['us_xla_cpu']:9.1f}us "
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--frontend", choices=("hand", "traced"), default="hand",
+                    help="DFG source: hand-built kernels_lib or the traced "
+                         "compiler frontend")
+    args = ap.parse_args()
+    for r in run(frontend=args.frontend):
+        print(f"{r['kernel']:28s} n={r['n']:6d} xla_cpu={r['us_xla_cpu']:9.1f}us "
               f"tpu_roofline={r['tpu_roofline_us']:8.2f}us  {r['note']}")
 
 

@@ -177,6 +177,34 @@ class DFG:
         return sum(1 for n in self.nodes.values()
                    if n.kind in (ALU, CMP, MUX, BRANCH, MERGE))
 
+    def canonical_signature(self, rounds: int = 4) -> Tuple[str, ...]:
+        """Structural fingerprint invariant under node renaming.
+
+        Weisfeiler-Lehman-style refinement: each node starts from its local
+        descriptor (kind, op, folded constant, accumulator parameters) and
+        repeatedly absorbs the sorted labels of its port-annotated neighbors.
+        Two DFGs built independently (hand-written vs traced) compare equal
+        iff they have the same node/edge structure — the frontend golden
+        tests rely on this.
+        """
+        label: Dict[str, str] = {}
+        for n in self.nodes.values():
+            op = int(n.op) if n.op is not None else -1
+            label[n.name] = (f"{n.kind}/{op}/{n.value}/{n.acc_init}/"
+                             f"{n.emit_every}")
+        for _ in range(rounds):
+            nxt: Dict[str, str] = {}
+            for name in self.nodes:
+                ins = sorted(f"i:{e.dst_port}<{e.src_port}:{int(e.back)}:"
+                             f"{label[e.src]}" for e in self.in_edges(name))
+                outs = sorted(f"o:{e.src_port}>{e.dst_port}:{int(e.back)}:"
+                              f"{label[e.dst]}" for e in self.out_edges(name))
+                nxt[name] = label[name] + "|" + ";".join(ins + outs)
+            label = nxt
+        import hashlib
+        return tuple(sorted(hashlib.sha1(l.encode()).hexdigest()[:16]
+                            for l in label.values()))
+
 
 class DFGBuilder:
     """Tiny fluent builder so kernels_lib reads like the paper's figures."""

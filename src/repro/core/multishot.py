@@ -91,6 +91,12 @@ class ShotRunner:
             self._mappings[key] = map_dfg(g, restarts=300)
         return self._mappings[key]
 
+    def seed_mapping(self, key: str, m: Mapping) -> None:
+        """Pre-register a place-and-route result for a config class (e.g.
+        computed at compile time by the frontend partitioner) so runs reuse
+        it instead of re-mapping."""
+        self._mappings.setdefault(key, m)
+
     def run_shot(self, key: str, g: DFG,
                  inputs: Dict[str, np.ndarray],
                  streams_changed: int,

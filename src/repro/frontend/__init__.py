@@ -1,0 +1,20 @@
+"""repro.frontend — compile Python/JAX functions onto the STRELA fabric.
+
+The automatic realization of the paper's Sec. VIII compiler guidelines:
+
+  * :func:`trace`   — Python/JAX function -> ``core.dfg`` IR (tracer.py)
+  * patterns        — reductions and lax.cond -> accumulator / Branch-Merge
+  * :func:`plan`    — oversized DFG -> multi-shot plan (partition.py)
+  * :func:`offload` — decorator: trace, cache, map, and dispatch to the
+                      cycle-accurate simulator or the Pallas backend
+"""
+from repro.frontend.offload import (CompiledKernel, OffloadedFunction,
+                                    RunInfo, offload)
+from repro.frontend.partition import Plan, Shot, plan
+from repro.frontend.tracer import (FrontendError, UnsupportedPrimitiveError,
+                                   trace)
+
+__all__ = [
+    "CompiledKernel", "FrontendError", "OffloadedFunction", "Plan", "RunInfo",
+    "Shot", "UnsupportedPrimitiveError", "offload", "plan", "trace",
+]

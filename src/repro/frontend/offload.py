@@ -1,0 +1,258 @@
+"""``@offload`` — run a plain Python/JAX function on the STRELA fabric.
+
+::
+
+    @offload                       # or @offload(backend="pallas", debug=True)
+    def relu(x):
+        return jnp.where(x > 0, x, 0)
+
+    y = relu(np.arange(-4, 4, dtype=np.int32))   # traced, mapped, simulated
+
+Each call: trace the function to a jaxpr, look the jaxpr hash up in the
+compilation cache, and on a miss lower it to a DFG, place-and-route it (or
+partition it into a multi-shot plan when it exceeds the 4x4 fabric), then
+dispatch:
+
+  * ``backend="sim"`` (default) — the cycle-accurate ``elastic_sim``:
+    numeric results straight off the simulated OMNs, II / cycle / op counts
+    on ``kernel.last`` for perf work;
+  * ``backend="pallas"`` — the fused ``fabric_stream`` Pallas kernel
+    (throughput path; acyclic non-reduction graphs only);
+  * multi-shot plans always run through ``ShotRunner`` (config + re-arm
+    cycle accounting on ``kernel.last.tally``).
+
+``debug=True`` additionally executes the original JAX function and asserts
+the fabric results match — the numpy-level reference check.
+
+Closure semantics follow ``jax.jit``: values captured from the enclosing
+scope are read at first trace (JAX caches the trace per function object);
+rebinding them later does not recompile. Parameterize kernels through
+arguments or build a fresh function per constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import dfg as D
+from repro.core.elastic_sim import SimResult, simulate
+from repro.core.mapper import Mapping
+from repro.core.multishot import ShotRunner, Tally
+from repro.frontend import partition
+from repro.frontend.tracer import FrontendError, trace
+
+BACKENDS = ("sim", "pallas")
+
+
+@dataclasses.dataclass
+class RunInfo:
+    """Cost observables of the most recent call."""
+
+    backend: str
+    n_shots: int
+    sim: Optional[SimResult] = None       # single-shot sim backend
+    tally: Optional[Tally] = None         # multi-shot plans
+
+    @property
+    def ii(self) -> float:
+        if self.sim is None:
+            raise FrontendError("II is only measured on the sim backend")
+        return self.sim.steady_ii()
+
+    @property
+    def cycles(self) -> int:
+        if self.sim is not None:
+            return self.sim.cycles
+        if self.tally is not None:
+            return self.tally.total
+        raise FrontendError("no timing recorded (pallas backend)")
+
+
+@dataclasses.dataclass
+class CompiledKernel:
+    """A lowered + mapped kernel, cached by jaxpr hash."""
+
+    name: str
+    length: int
+    dfg: D.DFG
+    plan: partition.Plan
+    out_shapes: List[Tuple[int, ...]]
+    treedef: Any
+    element_mode: bool = False      # traced per-element (lax.cond kernels)
+
+    @property
+    def mapping(self) -> Mapping:
+        if self.plan.n_shots != 1:
+            raise FrontendError(f"{self.name}: multi-shot plan has no single "
+                                f"mapping")
+        return self.plan.shots[0].mapping
+
+
+class OffloadedFunction:
+    """Callable wrapper produced by :func:`offload`."""
+
+    def __init__(self, fn: Callable, backend: str = "sim",
+                 debug: bool = False, name: Optional[str] = None,
+                 mode: str = "auto"):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+        self.fn = fn
+        self.backend = backend
+        self.debug = debug
+        self.name = name or getattr(fn, "__name__", "offloaded")
+        self.mode = mode
+        self._cache: Dict[str, CompiledKernel] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.last: Optional[RunInfo] = None
+        self.__wrapped__ = fn
+        self.__name__ = self.name
+
+    # -- compilation --------------------------------------------------------
+    def _jaxpr_key(self, length: int) -> Tuple[str, Any, bool]:
+        import jax
+        import jax.numpy as jnp
+        avals = [jax.ShapeDtypeStruct((length,), jnp.int32)
+                 for _ in self._arg_names()]
+        scalars = [jax.ShapeDtypeStruct((), jnp.int32)
+                   for _ in self._arg_names()]
+        # honour the kernel's trace mode so the recorded output shapes match
+        # what the tracer will actually lower
+        if self.mode == "element":
+            closed, out_shape = jax.make_jaxpr(
+                self.fn, return_shape=True)(*scalars)
+            element_mode = True
+        elif self.mode == "stream":
+            closed, out_shape = jax.make_jaxpr(
+                self.fn, return_shape=True)(*avals)
+            element_mode = False
+        else:
+            element_mode = False
+            try:
+                closed, out_shape = jax.make_jaxpr(
+                    self.fn, return_shape=True)(*avals)
+            except TypeError:
+                # lax.cond needs scalar operands; mirror the tracer's fallback
+                closed, out_shape = jax.make_jaxpr(
+                    self.fn, return_shape=True)(*scalars)
+                element_mode = True
+        # captured values (jnp scalars close over as constvars whose values
+        # are not part of the jaxpr text) must key the cache too
+        consts = [np.asarray(c).tolist() for c in closed.consts]
+        digest = hashlib.sha1(
+            f"{closed.jaxpr}|{consts}|{length}|{self.backend}"
+            .encode()).hexdigest()
+        return digest, out_shape, element_mode
+
+    def _arg_names(self) -> List[str]:
+        import inspect
+        return [p.name for p in
+                inspect.signature(self.fn).parameters.values()
+                if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+
+    def compile(self, length: int) -> CompiledKernel:
+        """Trace + lower + map for streams of ``length`` (cached)."""
+        import jax
+        key, out_shape, element_mode = self._jaxpr_key(length)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.cache_hits += 1
+            return hit
+        self.cache_misses += 1
+        g = trace(self.fn, length, name=self.name, mode=self.mode)
+        pl = partition.plan(g)
+        leaves, treedef = jax.tree_util.tree_flatten(out_shape)
+        # an element-mode jaxpr describes one stream element: its scalar
+        # outputs are full streams of ``length`` at run time
+        shapes = [(length,) if element_mode else tuple(l.shape)
+                  for l in leaves]
+        ck = CompiledKernel(self.name, length, g, pl, shapes, treedef,
+                            element_mode)
+        self._cache[key] = ck
+        return ck
+
+    # -- execution ----------------------------------------------------------
+    def __call__(self, *args):
+        arrays = [np.asarray(a, dtype=np.int32).reshape(-1) for a in args]
+        if len(arrays) != len(self._arg_names()):
+            raise TypeError(f"{self.name} expects {len(self._arg_names())} "
+                            f"stream arguments, got {len(arrays)}")
+        lengths = {a.shape[0] for a in arrays}
+        if len(lengths) != 1:
+            raise ValueError(f"{self.name}: all streams must share a length, "
+                             f"got {sorted(lengths)}")
+        (length,) = lengths
+        ck = self.compile(length)
+        inputs = dict(zip(ck.dfg.inputs, arrays))
+
+        if ck.plan.n_shots == 1:
+            outs, info = self._run_single(ck, inputs)
+        else:
+            runner = ShotRunner(with_timing=True)
+            outs = ck.plan.run(inputs, runner=runner)
+            info = RunInfo("sim", ck.plan.n_shots, tally=runner.tally)
+        self.last = info
+        result = self._pack(ck, outs)
+        if self.debug:
+            self._check(arrays, ck, result)
+        return result
+
+    def _run_single(self, ck: CompiledKernel, inputs):
+        g = ck.dfg
+        if self.backend == "pallas":
+            if g.back_edges() or any(n.is_reduction()
+                                     for n in g.nodes.values()):
+                raise FrontendError(
+                    f"{self.name}: the pallas backend handles acyclic "
+                    f"non-reduction DFGs (see kernels/fabric_stream.py); "
+                    f"use backend='sim'")
+            import jax.numpy as jnp
+            from repro.kernels.fabric_stream import fabric_stream
+            jin = {k: jnp.asarray(v) for k, v in inputs.items()}
+            outs = {k: np.asarray(v) for k, v in fabric_stream(g, jin).items()}
+            return outs, RunInfo("pallas", 1)
+        sim = simulate(ck.mapping, inputs)
+        return dict(sim.outputs), RunInfo("sim", 1, sim=sim)
+
+    def _pack(self, ck: CompiledKernel, outs: Dict[str, np.ndarray]):
+        import jax
+        leaves = []
+        for i, shape in enumerate(ck.out_shapes):
+            arr = np.asarray(outs[f"out{i}"], dtype=np.int32)
+            leaves.append(arr.reshape(()) if shape == () else arr)
+        return jax.tree_util.tree_unflatten(ck.treedef, leaves)
+
+    def _check(self, arrays, ck: CompiledKernel, result) -> None:
+        import jax
+        import jax.numpy as jnp
+        fn = jax.vmap(self.fn) if ck.element_mode else self.fn
+        ref = fn(*[jnp.asarray(a) for a in arrays])
+        ref_leaves = jax.tree_util.tree_leaves(ref)
+        got_leaves = jax.tree_util.tree_leaves(result)
+        for i, (r, o) in enumerate(zip(ref_leaves, got_leaves)):
+            r = np.asarray(r).astype(np.int32)
+            if not np.array_equal(r.reshape(-1), np.asarray(o).reshape(-1)):
+                raise FrontendError(
+                    f"{self.name}: debug check failed on output {i}: "
+                    f"fabric={np.asarray(o).reshape(-1)[:8]}... "
+                    f"reference={r.reshape(-1)[:8]}...")
+
+    def cache_info(self) -> Tuple[int, int, int]:
+        return self.cache_hits, self.cache_misses, len(self._cache)
+
+
+def offload(fn: Optional[Callable] = None, *, backend: str = "sim",
+            debug: bool = False, name: Optional[str] = None,
+            mode: str = "auto"):
+    """Decorator: compile a Python int32-stream function onto the fabric.
+
+    Usable bare (``@offload``) or parameterized
+    (``@offload(backend="pallas", debug=True)``).
+    """
+    def wrap(f: Callable) -> OffloadedFunction:
+        return OffloadedFunction(f, backend=backend, debug=debug, name=name,
+                                 mode=mode)
+    return wrap(fn) if fn is not None else wrap

@@ -1,0 +1,133 @@
+"""Control/reduction idiom recognition for the frontend (paper Sec. III-C).
+
+The fabric supports exactly two control patterns beyond elementwise data
+flow, and this module lowers the jaxpr idioms that express them:
+
+  * **reductions** — ``jnp.sum`` / ``jnp.prod`` / bitwise reductions over a
+    whole stream, and 1-D ``jnp.dot``: lower to the ALU's immediate feedback
+    accumulator (``acc_init`` + ``emit_every`` = stream length), the
+    hardware mechanism behind mac1/mac3 (Fig. 7c);
+  * **two-way ``lax.cond``** — lowers to BRANCH/MERGE pairs: every stream
+    operand consumed by the branches is steered by a BRANCH node driven by
+    the predicate, each branch sub-jaxpr is lowered on its leg (so only the
+    taken side fires, unlike a mux that evaluates both), and each result is
+    re-joined by a MERGE of the complementary legs. ``lax.cond`` needs a
+    scalar predicate, so it is only reachable in element-mode traces (the
+    tracer falls back automatically).
+
+Handlers follow the tracer's calling convention:
+``handler(lowerer, eqn, in_values) -> out_values``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core.isa import AluOp
+from repro.frontend.tracer import (ConstVal, FrontendError, Lowerer, Value,
+                                   Wire, _fold)
+
+# reduction primitive -> (ALU op, accumulator init)
+_REDUCE_OPS = {
+    "reduce_sum": (AluOp.ADD, 0),
+    "reduce_prod": (AluOp.MUL, 1),
+    "reduce_or": (AluOp.OR, 0),
+    "reduce_and": (AluOp.AND, -1),
+    "reduce_xor": (AluOp.XOR, 0),
+}
+
+
+def _h_reduce(lw: Lowerer, eqn, ins: List[Value]) -> List[Value]:
+    prim = eqn.primitive.name
+    op, init = _REDUCE_OPS[prim]
+    axes = tuple(eqn.params.get("axes", ()))
+    in_shape = tuple(eqn.invars[0].aval.shape)
+    (v,) = ins
+    if not axes or not in_shape:
+        return [v]                       # scalar-mode no-op reduction
+    if len(in_shape) != 1 or axes != (0,):
+        raise lw.unsupported(
+            eqn, f"partial/multi-axis reduction over shape {in_shape} "
+                 f"axes {axes}; only whole-stream 1-D reductions map to the "
+                 f"ALU accumulator")
+    if isinstance(v, ConstVal):
+        acc = np.int64(init)
+        from repro.core.executor import alu_eval
+        for _ in range(lw.length):
+            acc = np.int64(alu_eval(op, acc, v.value))
+        return [ConstVal(_fold(acc))]
+    return [lw.emit_alu(op, v, stem="acc", acc_init=init,
+                        emit_every=lw.length)]
+
+
+def _h_dot_general(lw: Lowerer, eqn, ins: List[Value]) -> List[Value]:
+    ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+    shapes = [tuple(v.aval.shape) for v in eqn.invars]
+    if (tuple(lc), tuple(rc)) != ((0,), (0,)) or lb or rb or \
+            any(len(s) != 1 for s in shapes):
+        raise lw.unsupported(
+            eqn, f"dot_general over shapes {shapes}; only 1-D dot products "
+                 f"(a single mac lane) lower to the fabric")
+    a, b = ins
+    prod = lw.alu(AluOp.MUL, a, b)
+    if isinstance(prod, ConstVal):
+        return [ConstVal(_fold(np.int64(prod.value) * lw.length))]
+    return [lw.emit_alu(AluOp.ADD, prod, stem="acc", acc_init=0,
+                        emit_every=lw.length)]
+
+
+def _h_cond(lw: Lowerer, eqn, ins: List[Value]) -> List[Value]:
+    branches = eqn.params["branches"]
+    if len(branches) != 2:
+        raise lw.unsupported(
+            eqn, f"{len(branches)}-way cond (the fabric's Branch steers "
+                 f"two complementary paths)")
+    index, *operands = ins
+    if isinstance(index, ConstVal):
+        # statically-taken branch: inline it directly
+        br = branches[1 if index.value else 0]
+        return lw.lower_jaxpr(br.jaxpr, br.consts, operands)
+
+    true_env: List[Value] = []
+    false_env: List[Value] = []
+    true_leg: Wire = None
+    false_leg: Wire = None
+    for v in operands:
+        if isinstance(v, ConstVal):
+            true_env.append(v)
+            false_env.append(v)
+            continue
+        name = lw.fresh("br")
+        lw.b.branch(name, v.node, index.node,
+                    a_port=v.port, ctrl_port=index.port)
+        t, f = Wire(name, "t"), Wire(name, "f")
+        true_env.append(t)
+        false_env.append(f)
+        if true_leg is None:
+            true_leg, false_leg = t, f
+    if true_leg is None:
+        raise lw.unsupported(
+            eqn, "cond consumes no stream operands; nothing paces the "
+                 "branch legs")
+
+    t_outs = lw.lower_jaxpr(branches[1].jaxpr, branches[1].consts, true_env)
+    f_outs = lw.lower_jaxpr(branches[0].jaxpr, branches[0].consts, false_env)
+
+    outs: List[Value] = []
+    for t, f in zip(t_outs, f_outs):
+        if isinstance(t, ConstVal):
+            t = lw.paced_const(true_leg, t.value)
+        if isinstance(f, ConstVal):
+            f = lw.paced_const(false_leg, f.value)
+        name = lw.fresh("mg")
+        lw.b.merge(name, t.node, f.node, a_port=t.port, b_port=f.port)
+        outs.append(Wire(name))
+    return outs
+
+
+PATTERN_HANDLERS: Dict[str, Callable] = {
+    **{prim: _h_reduce for prim in _REDUCE_OPS},
+    "dot_general": _h_dot_general,
+    "cond": _h_cond,
+}

@@ -1,8 +1,11 @@
 """Test configuration: make the repo root importable (for ``benchmarks``)
-so the canonical ``PYTHONPATH=src pytest tests/`` invocation works."""
+and the tests dir itself (for ``hypothesis_stub``) so the canonical
+``PYTHONPATH=src pytest tests/`` invocation works."""
 import os
 import sys
 
-_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-if _ROOT not in sys.path:
-    sys.path.insert(0, _ROOT)
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+for _p in (_ROOT, _HERE):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

@@ -1,0 +1,35 @@
+"""Fallback shims so property-based tests degrade to skips when
+``hypothesis`` is not installed (it is an optional dev dependency — see
+requirements.txt). Import sites do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from hypothesis_stub import given, settings, st
+
+keeping every non-property test in the module collectable and runnable.
+"""
+import pytest
+
+
+class _StubStrategies:
+    """Stands in for ``hypothesis.strategies``: any strategy constructor
+    (``st.integers(...)``, ``st.composite``, ...) returns an inert callable,
+    which is enough for module-level decorator evaluation; the decorated
+    tests themselves are skipped by the ``given`` stub below."""
+
+    def __getattr__(self, name):
+        return lambda *args, **kwargs: (lambda *a, **k: None)
+
+
+st = _StubStrategies()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+    return deco
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn

@@ -1,7 +1,10 @@
 """DFG IR + functional-executor tests, including hypothesis properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_stub import given, settings, st
 
 from repro.core import dfg as D
 from repro.core import kernels_lib as K
