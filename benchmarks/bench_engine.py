@@ -1,0 +1,146 @@
+"""Execution-engine benchmark: batched vs naive dispatch per kernel.
+
+For each kernel the same request set is dispatched twice through
+``repro.engine.Engine`` — once per-request (``run``: cold fabric, full
+configuration fetch every time) and once batched (``submit``/``flush``:
+requests grouped by config class, consecutive same-class shots pay only the
+stream re-arm preamble). The difference in config+re-arm cycles is the
+amortization the paper's multi-shot results hinge on (Table II, Sec. IV-B),
+applied at the traffic level.
+
+``run()`` returns machine-readable rows; ``write_json()`` dumps them as
+``BENCH_engine.json`` (the perf-trajectory artifact consumed by CI and
+``benchmarks/run.py``). The CLI supports tiny smoke runs::
+
+    PYTHONPATH=src python -m benchmarks.bench_engine --length 16 --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import kernels_lib as K
+from repro.core.dfg import DFG
+from repro.core.fabric import Fabric
+from repro.engine import ArtifactCache, Engine
+
+# kernel -> (DFG factory, input maker); lengths are decided at run time
+_KERNELS: Dict[str, Callable[[int], DFG]] = {
+    "relu": lambda n: K.relu(),
+    "vadd": lambda n: K.vadd(),
+    "axpby": lambda n: K.axpby(3, 5),
+    "mac1": lambda n: K.mac1(n),
+    "fft": lambda n: K.fft_butterfly(),
+}
+
+
+def _inputs(g: DFG, length: int, rng) -> Dict[str, np.ndarray]:
+    return {name: rng.integers(-64, 64, length).astype(np.int32)
+            for name in g.inputs}
+
+
+def run(length: int = 64, n_requests: int = 16, backend: str = "sim",
+        fabric: Fabric = None) -> List[dict]:
+    fabric = fabric or Fabric()
+    rng = np.random.default_rng(0)
+    rows: List[dict] = []
+    for kname, factory in _KERNELS.items():
+        g = factory(length)
+        reqs = [_inputs(g, length, rng) for _ in range(n_requests)]
+
+        naive = Engine(fabric=fabric, backend=backend,
+                       cache=ArtifactCache(memory_only=True))
+        art = naive.compile(g)
+        t0 = time.perf_counter()
+        for ins in reqs:
+            naive.run(art, dict(ins))
+        t_naive = time.perf_counter() - t0
+        naive_overhead = naive.tally.config + naive.tally.rearm
+
+        batched = Engine(fabric=fabric, backend=backend,
+                         cache=ArtifactCache(memory_only=True))
+        art_b = batched.compile(g)
+        t0 = time.perf_counter()
+        for ins in reqs:
+            batched.submit(art_b, dict(ins))
+        batched.flush()
+        t_batched = time.perf_counter() - t0
+        batched_overhead = batched.tally.config + batched.tally.rearm
+
+        rows.append({
+            "kernel": kname,
+            "backend": backend,
+            "geometry": f"{fabric.rows}x{fabric.cols}",
+            "n_shots": art_b.n_shots,
+            "length": length,
+            "requests": n_requests,
+            "ii": art_b.estimated_ii(),
+            "cycles_naive": naive.tally.total,
+            "cycles_batched": batched.tally.total,
+            "exec_cycles": batched.tally.exec,
+            "config_rearm_naive": naive_overhead,
+            "config_rearm_batched": batched_overhead,
+            "rearm_cycles_saved": naive_overhead - batched_overhead,
+            "wall_us_naive": t_naive * 1e6,
+            "wall_us_batched": t_batched * 1e6,
+        })
+    return rows
+
+
+def write_json(rows: List[dict], path: str = "BENCH_engine.json") -> str:
+    with open(path, "w") as f:
+        json.dump({"bench": "engine", "rows": rows}, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(length: int = 64, n_requests: int = 16, json_path: str = "",
+         geometries: Tuple[Tuple[int, int], ...] = ((4, 4),)) -> List[dict]:
+    rows: List[dict] = []
+    for (r_, c_) in geometries:
+        geo_rows = run(length=length, n_requests=n_requests,
+                       fabric=Fabric(rows=r_, cols=c_))
+        print(f"  {r_}x{c_} fabric")
+        print(f"  {'kernel':8s} {'II':>5s} {'total(naive)':>13s} "
+              f"{'total(batch)':>13s} {'ovh(naive)':>11s} "
+              f"{'ovh(batch)':>11s} {'saved':>7s}")
+        for r in geo_rows:
+            print(f"  {r['kernel']:8s} {r['ii']:5.2f} "
+                  f"{r['cycles_naive']:13d} {r['cycles_batched']:13d} "
+                  f"{r['config_rearm_naive']:11d} "
+                  f"{r['config_rearm_batched']:11d} "
+                  f"{r['rearm_cycles_saved']:7d}")
+            # multi-shot plans alternate fabric configs internally, so
+            # back-to-back requests legitimately save nothing
+            if r["n_shots"] == 1:
+                assert r["rearm_cycles_saved"] > 0, (
+                    f"{r['kernel']}: batching saved no overhead cycles")
+            else:
+                assert r["rearm_cycles_saved"] >= 0, r
+        rows.extend(geo_rows)
+    if json_path:
+        print(f"  wrote {write_json(rows, json_path)}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--length", type=int, default=64,
+                    help="stream length per request")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="requests per kernel (>= 8 exercises the "
+                         "acceptance-criterion batch size)")
+    ap.add_argument("--geometry", action="append", default=None,
+                    metavar="RxC", help="fabric geometry to sweep "
+                    "(repeatable; default 4x4)")
+    ap.add_argument("--json", default="BENCH_engine.json",
+                    help="output path ('' disables)")
+    args = ap.parse_args()
+    geos = tuple(tuple(int(v) for v in s.lower().split("x"))
+                 for s in (args.geometry or ["4x4"]))
+    main(length=args.length, n_requests=args.requests,
+         json_path=args.json, geometries=geos)

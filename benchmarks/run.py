@@ -4,8 +4,14 @@ end (harness contract) and a human-readable report above them.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+# allow `python benchmarks/run.py` (the documented invocation): the
+# `benchmarks` package resolves relative to the repo root, not this file
+if __package__ in (None, ""):
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
@@ -16,8 +22,8 @@ from repro.core.soc import cpu_model_report
 
 def main() -> None:
     t_start = time.time()
-    from benchmarks import (bench_compare, bench_kernels, bench_multishot,
-                            bench_oneshot)
+    from benchmarks import (bench_compare, bench_engine, bench_kernels,
+                            bench_multishot, bench_oneshot)
 
     # ---- calibrate the power model across ALL 12 paper samples ----
     print("=" * 72)
@@ -64,6 +70,9 @@ def main() -> None:
     print("=" * 72)
     print("Pallas kernel micro-benchmarks")
     bench_kernels.main()
+    print("=" * 72)
+    print("Execution engine — batched vs naive dispatch")
+    engine_rows = bench_engine.main(json_path="BENCH_engine.json")
 
     # ---- harness CSV contract ----
     print("=" * 72)
@@ -82,6 +91,10 @@ def main() -> None:
     for r in bench_kernels.run():
         print(f"kernel_{r['kernel']},{r['us_xla_cpu']:.3f},"
               f"tpu_roofline_us={r['tpu_roofline_us']:.3f}")
+    for r in engine_rows:
+        us = r["cycles_batched"] / clock
+        print(f"engine_{r['kernel']},{us:.3f},"
+              f"ii={r['ii']:.2f};rearm_saved={r['rearm_cycles_saved']}")
     print(f"# total wall time {time.time() - t_start:.1f}s", file=sys.stderr)
 
 

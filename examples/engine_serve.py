@@ -1,0 +1,86 @@
+"""Serve mixed kernel traffic through the execution engine.
+
+Demonstrates the full unified pipeline (DESIGN.md §8) on a request mix an
+embedded deployment would actually see: three kernels, interleaved arrival
+order, dispatched twice —
+
+  1. naive:    every request configures the fabric from scratch;
+  2. batched:  requests are queued and flushed grouped by config class, so
+               same-kernel runs pay only the stream re-arm preamble.
+
+Prints per-strategy Tally breakdowns and the configuration cycles the
+batcher saved. Also shows a non-4x4 geometry handling the same artifact
+pipeline.
+
+Run: PYTHONPATH=src python examples/engine_serve.py
+"""
+import numpy as np
+
+from repro.core import kernels_lib as K
+from repro.core.fabric import Fabric
+from repro.engine import ArtifactCache, Engine
+
+LENGTH = 64
+PER_KERNEL = 8
+
+
+def make_traffic(rng):
+    """Interleaved request mix: (kernel name, DFG factory, inputs)."""
+    kernels = {
+        "relu": K.relu(),
+        "axpby": K.axpby(3, 5),
+        "mac1": K.mac1(LENGTH),
+    }
+    traffic = []
+    for i in range(PER_KERNEL):
+        for name, g in kernels.items():
+            ins = {k: rng.integers(-64, 64, LENGTH).astype(np.int32)
+                   for k in g.inputs}
+            traffic.append((name, g, ins))
+    return kernels, traffic
+
+
+def main():
+    rng = np.random.default_rng(42)
+    kernels, traffic = make_traffic(rng)
+
+    print(f"traffic: {len(traffic)} requests, {len(kernels)} config classes,"
+          f" arrival order interleaved (worst case for a naive dispatcher)")
+
+    naive = Engine(cache=ArtifactCache(memory_only=True))
+    arts = {name: naive.compile(g) for name, g in kernels.items()}
+    for name, _, ins in traffic:
+        naive.run(arts[name], ins)
+    t = naive.tally
+    print(f"\nnaive   : config={t.config:6d} rearm={t.rearm:6d} "
+          f"exec={t.exec:6d} total={t.total:6d} (duty {t.duty:.2f})")
+
+    batched = Engine(cache=ArtifactCache(memory_only=True))
+    arts = {name: batched.compile(g) for name, g in kernels.items()}
+    handles = [(name, batched.submit(arts[name], ins))
+               for name, _, ins in traffic]
+    batched.flush()
+    t = batched.tally
+    print(f"batched : config={t.config:6d} rearm={t.rearm:6d} "
+          f"exec={t.exec:6d} total={t.total:6d} (duty {t.duty:.2f})")
+    print(f"batching saved {batched.stats.config_cycles_saved} configuration"
+          f" cycles ({batched.stats.requests} requests,"
+          f" {batched.stats.flushes} flush)")
+
+    # results stay exact — spot-check one relu request
+    name, h = next((n, h) for n, h in handles if n == "relu")
+    x = h.inputs["x"]
+    assert (h.result()["out"] == np.maximum(x, 0)).all()
+
+    # same pipeline, different geometry
+    eng64 = Engine(fabric=Fabric(rows=6, cols=4))
+    art = eng64.compile(K.mac1(LENGTH))
+    ins = {"a": np.arange(LENGTH, dtype=np.int32),
+           "b0": np.ones(LENGTH, dtype=np.int32)}
+    out = eng64.run(art, ins)
+    print(f"\n6x4 fabric: mac1 -> {int(out['out0'][0])} "
+          f"(= {LENGTH*(LENGTH-1)//2}), {eng64.tally.total} cycles")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,8 +34,9 @@ from repro.core import kernels_lib as K
 from repro.core.dfg import DFG
 from repro.core.elastic_sim import SimResult, simulate
 from repro.core.executor import execute
+from repro.core.fabric import Fabric
 from repro.core.mapper import Mapping, map_dfg
-from repro.core.streams import StreamSpec
+from repro.core.streams import BusConfig, StreamSpec
 
 I32 = np.int32
 
@@ -77,10 +78,20 @@ class Tally:
 
 class ShotRunner:
     """Executes shots functionally and accounts cycle costs, memoizing one
-    cycle-level simulation per (kernel-name, length, layout) class."""
+    cycle-level simulation per (kernel-name, length, layout) class.
 
-    def __init__(self, with_timing: bool = True):
+    ``fabric`` selects the target geometry (rows/cols/IMN/OMN counts) for
+    every mapping the runner performs itself; pre-seeded mappings keep the
+    geometry they were produced with. ``bus`` sets the interleaved-bank
+    count used for shot stream layouts.
+    """
+
+    def __init__(self, with_timing: bool = True,
+                 fabric: Optional[Fabric] = None,
+                 bus: Optional[BusConfig] = None):
         self.with_timing = with_timing
+        self.fabric = fabric or Fabric()
+        self.bus = bus or BusConfig()
         self.tally = Tally()
         self._mappings: Dict[str, Mapping] = {}
         self._sims: Dict[Tuple, SimResult] = {}
@@ -88,8 +99,20 @@ class ShotRunner:
 
     def mapping(self, key: str, g: DFG) -> Mapping:
         if key not in self._mappings:
-            self._mappings[key] = map_dfg(g, restarts=300)
+            self._mappings[key] = map_dfg(g, self.fabric, restarts=300)
         return self._mappings[key]
+
+    @property
+    def current_config_class(self) -> Optional[str]:
+        """Config class the fabric currently holds (None = unconfigured)."""
+        return self._current_kernel
+
+    def invalidate_config(self) -> None:
+        """Forget the fabric's configuration state. Models independent
+        per-request dispatch: between isolated requests the fabric cannot be
+        assumed to still hold the caller's configuration, so the next shot
+        pays a full configuration fetch."""
+        self._current_kernel = None
 
     def seed_mapping(self, key: str, m: Mapping) -> None:
         """Pre-register a place-and-route result for a config class (e.g.
@@ -116,9 +139,9 @@ class ShotRunner:
         (length,) = {v.shape[0] for v in inputs.values()}
         sig = (cfg_key, length, layout)
         if sig not in self._sims:
-            sin, sout = _shot_streams(g, length, layout)
+            sin, sout = _shot_streams(g, length, layout, self.bus.n_banks)
             self._sims[sig] = simulate(m, inputs, streams_in=sin,
-                                       streams_out=sout)
+                                       streams_out=sout, bus=self.bus)
         sim = self._sims[sig]
         self.tally.exec += sim.cycles
         self.tally.rearm += rearm_cycles(streams_changed, pe_config_words)
@@ -133,11 +156,12 @@ class ShotRunner:
         return dict(self._mappings)
 
 
-def _shot_streams(g: DFG, length: int, layout: Tuple[int, ...]):
+def _shot_streams(g: DFG, length: int, layout: Tuple[int, ...],
+                  n_banks: int = 4):
     """StreamSpecs matching the shot's real bank behaviour. ``layout`` holds
-    per-(inputs+outputs) stride residues mod 4; residue 0 = single-bank
-    stream (stride multiple of the bank count, e.g. a matrix column)."""
-    n_banks = 4
+    per-(inputs+outputs) stride residues mod the bank count; residue 0 =
+    single-bank stream (stride multiple of the bank count, e.g. a matrix
+    column)."""
     names = list(g.inputs) + list(g.outputs)
     if not layout:
         layout = tuple([1] * len(names))
@@ -220,39 +244,31 @@ def run_axpby(alpha: int, x: np.ndarray, beta: int, y: np.ndarray,
     out[:] = outs["out"]
 
 
+def _engine_for(runner: ShotRunner):
+    """Engine sharing this runner's tally/mappings (lazy import: the engine
+    package layers above core)."""
+    from repro.engine.scheduler import Engine
+    return Engine(runner=runner)
+
+
 def run_gemm(alpha: int, A: np.ndarray, B: np.ndarray, beta: int,
              C: np.ndarray, with_timing: bool = True,
              runner: Optional[ShotRunner] = None) -> Tally:
-    """C = alpha*A@B + beta*C (PolyBench gemm)."""
+    """C = alpha*A@B + beta*C (PolyBench gemm). Engine client — see
+    ``repro.engine.clients``."""
+    from repro.engine import clients
     r = runner or ShotRunner(with_timing)
-    NI, NJ = A.shape[0], B.shape[1]
-    tmp = np.zeros((NI, NJ), dtype=I32)
-    run_mm(A, B, tmp, runner=r)
-    res = np.zeros(NI * NJ, dtype=I32)
-    run_axpby(alpha, tmp.reshape(-1), beta, C.reshape(-1), res, r)
-    C[:, :] = res.reshape(NI, NJ)
-    return r.tally
+    return clients.run_gemm(_engine_for(r), alpha, A, B, beta, C)
 
 
 def run_gesummv(alpha: int, beta: int, A: np.ndarray, B: np.ndarray,
                 x: np.ndarray, y: np.ndarray, with_timing: bool = True,
                 runner: Optional[ShotRunner] = None) -> Tally:
-    """y = alpha*A@x + beta*B@x (dual-MAC row shots share the x stream)."""
+    """y = alpha*A@x + beta*B@x (dual-MAC row shots share the x stream).
+    Engine client — see ``repro.engine.clients``."""
+    from repro.engine import clients
     r = runner or ShotRunner(with_timing)
-    N = A.shape[0]
-    g = K.mac2x(N)
-    d1 = np.zeros(N, dtype=I32)
-    d2 = np.zeros(N, dtype=I32)
-    for i in range(N):
-        # only the two row bases change between shots (x, outputs, sizes
-        # and strides persist) -> 2 MMIO writes per re-arm
-        outs = r.run_shot(f"mac2x_{N}", g,
-                          {"a": A[i].astype(I32), "b": B[i].astype(I32),
-                           "x": x.astype(I32)},
-                          streams_changed=2, layout=(1, 1, 1, 0, 0))
-        d1[i], d2[i] = outs["out0"][0], outs["out1"][0]
-    run_axpby(alpha, d1, beta, d2, y, r)
-    return r.tally
+    return clients.run_gesummv(_engine_for(r), alpha, beta, A, B, x, y)
 
 
 def run_gemver(alpha: int, beta: int, A: np.ndarray,
@@ -324,18 +340,11 @@ def _matvec_mac3(r: ShotRunner, M: np.ndarray, v: np.ndarray,
 
 def run_2mm(alpha: int, beta: int, A, B, C, D, with_timing=True,
             runner: Optional[ShotRunner] = None) -> Tally:
-    """D = alpha*A@B@C + beta*D (PolyBench 2mm)."""
+    """D = alpha*A@B@C + beta*D (PolyBench 2mm). Engine client — see
+    ``repro.engine.clients``."""
+    from repro.engine import clients
     r = runner or ShotRunner(with_timing)
-    NI, NJ = A.shape[0], B.shape[1]
-    NL = C.shape[1]
-    tmp = np.zeros((NI, NJ), dtype=I32)
-    run_mm(A, B, tmp, runner=r)
-    tmp2 = np.zeros((NI, NL), dtype=I32)
-    run_mm(tmp, C, tmp2, runner=r)
-    res = np.zeros(NI * NL, dtype=I32)
-    run_axpby(alpha, tmp2.reshape(-1), beta, D.reshape(-1), res, r)
-    D[:, :] = res.reshape(NI, NL)
-    return r.tally
+    return clients.run_2mm(_engine_for(r), alpha, beta, A, B, C, D)
 
 
 def run_3mm(A, B, C, D, with_timing=True,

@@ -1,0 +1,32 @@
+"""repro.engine — the unified execution engine.
+
+One pipeline for every way this code base runs a kernel::
+
+    compile(fn | DFG, geometry) -> CompiledArtifact -> Engine.run(...)
+
+  * :func:`compile`            — trace/lower, partition against an arbitrary
+                                 ``Fabric`` geometry, place & route, pack ISA
+                                 config words (compiler.py)
+  * :class:`CompiledArtifact`  — the serializable bundle, persistently
+                                 cached on disk keyed by content digest x
+                                 length x geometry x backend (artifact.py,
+                                 cache.py)
+  * :class:`Engine`            — dispatch: naive per-request ``run`` or
+                                 batched ``submit``/``flush`` grouping
+                                 requests by config class so same-config
+                                 traffic pays re-arm instead of full
+                                 reconfiguration (scheduler.py)
+  * clients                    — Table II benchmarks (gemm/gesummv/2mm)
+                                 rewritten over the engine (clients.py)
+"""
+from repro.engine.artifact import (ArtifactError, CompiledArtifact,
+                                   estimate_ii)
+from repro.engine.cache import ArtifactCache, default_cache
+from repro.engine.compiler import compile, geometry_of
+from repro.engine.scheduler import Engine, EngineStats, Handle
+
+__all__ = [
+    "ArtifactCache", "ArtifactError", "CompiledArtifact", "Engine",
+    "EngineStats", "Handle", "compile", "default_cache", "estimate_ii",
+    "geometry_of",
+]

@@ -1,0 +1,172 @@
+"""``compile(fn_or_dfg, geometry) -> CompiledArtifact`` — the unified
+compile half of the execution pipeline.
+
+Accepts either of the two kernel sources the code base produces:
+
+  * a hand-built ``core.dfg.DFG`` (kernels_lib / benchmark decompositions),
+    keyed by a structural content digest;
+  * a plain Python/JAX callable, traced through the frontend
+    (``frontend.tracer``) and keyed by its jaxpr hash — the same key the
+    ``@offload`` decorator uses, so both entry points share one artifact
+    cache.
+
+Either way the kernel is partitioned against the *target geometry*
+(``frontend.partition.plan`` on an arbitrary ``Fabric``), every shot is
+placed & routed, and the per-shot ISA configuration word streams are packed
+(Sec. V-B bus format). The resulting ``CompiledArtifact`` is stored in the
+persistent cache and handed to ``engine.Engine`` for execution.
+
+Frontend modules are imported lazily: ``repro.frontend`` imports this
+package for its cache, and function-level imports keep the cycle inert.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core import dfg as D
+from repro.core.fabric import Fabric
+from repro.core.isa import config_stream
+from repro.core.mapper import generate_configs
+from repro.engine.artifact import (SCHEMA_VERSION, ArtifactError,
+                                   CompiledArtifact, Geometry)
+from repro.engine.cache import ArtifactCache, default_cache
+
+
+def geometry_of(fabric: Fabric) -> Geometry:
+    return (fabric.rows, fabric.cols, fabric.n_imns, fabric.n_omns)
+
+
+def dfg_digest(g: D.DFG, geometry: Geometry, backend: str,
+               pe_limit: Optional[int] = None) -> str:
+    """Content digest of a DFG compile request. Node names participate (a
+    Mapping's placement is keyed by node name, so structural equality alone
+    would alias artifacts whose mappings don't transfer). ``pe_limit``
+    changes the partition plan, so it keys too; ``restarts`` is a search
+    budget, not a semantic input, and deliberately does not."""
+    h = hashlib.sha1()
+    h.update(f"v{SCHEMA_VERSION}|{g.name}|{geometry}|{backend}|"
+             f"{pe_limit}".encode())
+    for name in sorted(g.nodes):
+        n = g.nodes[name]
+        op = int(n.op) if n.op is not None else -1
+        h.update(f"N|{name}|{n.kind}|{op}|{n.value}|{n.acc_init}|"
+                 f"{n.emit_every}".encode())
+    for e in sorted(g.edges, key=lambda e: (e.src, e.src_port, e.dst,
+                                            e.dst_port)):
+        h.update(f"E|{e.src}|{e.src_port}|{e.dst}|{e.dst_port}|"
+                 f"{int(e.back)}|{e.init}".encode())
+    h.update(f"I|{g.inputs}|O|{g.outputs}".encode())
+    return h.hexdigest()
+
+
+def fn_cache_key(fn: Callable, length: int, mode: str, backend: str,
+                 geometry: Geometry, arg_names: List[str],
+                 pe_limit: Optional[int] = None) -> Tuple[str, Any, bool]:
+    """(digest, jax out_shape, element_mode) for a traced-function compile.
+
+    Mirrors the tracer's mode resolution so the recorded output shapes
+    match what lowering will actually produce; captured closure values
+    (jaxpr constvars) participate in the digest.
+    """
+    import jax
+    import jax.numpy as jnp
+    avals = [jax.ShapeDtypeStruct((length,), jnp.int32) for _ in arg_names]
+    scalars = [jax.ShapeDtypeStruct((), jnp.int32) for _ in arg_names]
+    if mode == "element":
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*scalars)
+        element_mode = True
+    elif mode == "stream":
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*avals)
+        element_mode = False
+    else:
+        element_mode = False
+        try:
+            closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*avals)
+        except TypeError:
+            # lax.cond needs scalar operands; mirror the tracer's fallback
+            closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*scalars)
+            element_mode = True
+    consts = [np.asarray(c).tolist() for c in closed.consts]
+    digest = hashlib.sha1(
+        f"v{SCHEMA_VERSION}|{closed.jaxpr}|{consts}|{length}|{geometry}|"
+        f"{backend}|{pe_limit}".encode()).hexdigest()
+    return digest, out_shape, element_mode
+
+
+def build_artifact(g: D.DFG, key: str, fabric: Fabric, backend: str,
+                   name: Optional[str] = None, length: Optional[int] = None,
+                   element_mode: bool = False,
+                   out_shapes: Optional[List[Tuple[int, ...]]] = None,
+                   restarts: int = 200,
+                   pe_limit: Optional[int] = None) -> CompiledArtifact:
+    """Partition + place & route + config-word emission (no cache I/O)."""
+    from repro.frontend import partition
+    pl = partition.plan(g, fabric, restarts=restarts, pe_limit=pe_limit)
+    name = name or g.name
+    config_class = f"{name}:{key[:10]}"
+    words: Dict[str, List[int]] = {}
+    for i, shot in enumerate(pl.shots):
+        # globally unique shot keys: runner memoization must never alias two
+        # artifacts whose shot DFGs happen to share a name
+        shot.key = config_class if pl.n_shots == 1 \
+            else f"{config_class}/s{i}"
+        words[shot.key] = config_stream(generate_configs(shot.mapping))
+    return CompiledArtifact(
+        name=name, key=key, backend=backend, geometry=geometry_of(fabric),
+        plan=pl, config_words=words, config_class=config_class,
+        length=length, element_mode=element_mode, out_shapes=out_shapes)
+
+
+def compile(fn_or_dfg: Union[Callable, D.DFG], length: Optional[int] = None,
+            *, fabric: Optional[Fabric] = None, backend: str = "sim",
+            mode: str = "auto", name: Optional[str] = None,
+            cache: Optional[ArtifactCache] = None, restarts: int = 200,
+            pe_limit: Optional[int] = None) -> CompiledArtifact:
+    """Compile a kernel into a cached, runnable ``CompiledArtifact``.
+
+    ``length`` is required for callables (the traced stream extent) and
+    ignored for DFGs, whose mappings are length-independent.
+    """
+    fabric = fabric or Fabric()
+    cache = cache if cache is not None else default_cache()
+    geometry = geometry_of(fabric)
+
+    if isinstance(fn_or_dfg, D.DFG):
+        g = fn_or_dfg
+        key = dfg_digest(g, geometry, backend, pe_limit)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+        art = build_artifact(g, key, fabric, backend, name=name,
+                             restarts=restarts, pe_limit=pe_limit)
+        cache.put(art)
+        return art
+
+    if not callable(fn_or_dfg):
+        raise ArtifactError(f"compile() takes a DFG or a callable, got "
+                            f"{type(fn_or_dfg)!r}")
+    if length is None:
+        raise ArtifactError("compile(fn) requires the stream length")
+    import inspect
+    import jax
+    fn = fn_or_dfg
+    arg_names = [p.name for p in inspect.signature(fn).parameters.values()
+                 if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    key, out_shape, element_mode = fn_cache_key(
+        fn, length, mode, backend, geometry, arg_names, pe_limit)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    from repro.frontend.tracer import trace
+    kname = name or getattr(fn, "__name__", "kernel")
+    g = trace(fn, length, name=kname, mode=mode)
+    leaves, _ = jax.tree_util.tree_flatten(out_shape)
+    shapes = [(length,) if element_mode else tuple(l.shape) for l in leaves]
+    art = build_artifact(g, key, fabric, backend, name=kname, length=length,
+                         element_mode=element_mode, out_shapes=shapes,
+                         restarts=restarts, pe_limit=pe_limit)
+    cache.put(art)
+    return art

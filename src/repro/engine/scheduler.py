@@ -1,0 +1,212 @@
+"""The execution engine: artifact dispatch with config-class batching.
+
+The paper's central performance lever is amortization: multi-shot traffic
+wins (115.96 vs 72.68 MOPs/mW, Table II) exactly when reconfiguration and
+stream re-arm costs are shared across work. ``Engine`` applies that lever
+at the request level:
+
+  * ``run(artifact, inputs)`` — *naive per-request dispatch*. Between
+    independent requests the fabric cannot be assumed to still hold the
+    caller's configuration (another tenant may have claimed it), so every
+    run pays a full configuration fetch plus re-arm.
+  * ``submit(...)`` / ``flush()`` — *batched dispatch*. Queued requests
+    are grouped by their artifact's config class (stable within a class,
+    classes ordered by first arrival); consecutive shots sharing a fabric
+    configuration pay only the re-arm preamble
+    (``SYNC + 14*streams_changed + 5*config_words``) instead of a full
+    reconfiguration. The scheduler may reorder *across* classes only —
+    requests are independent by contract (data-dependent phases flush
+    between submissions).
+
+All cycle accounting lands in the shared ``ShotRunner`` tally;
+``EngineStats`` additionally tracks what the same requests would have cost
+one-by-one, so the batching savings are directly observable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.fabric import Fabric
+from repro.core.multishot import ShotRunner, Tally
+from repro.engine.artifact import ArtifactError, CompiledArtifact
+from repro.engine.cache import ArtifactCache, default_cache
+from repro.engine import compiler
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Batching observability: actual vs naive-dispatch configuration cost."""
+
+    requests: int = 0
+    flushes: int = 0
+    config_cycles_paid: int = 0       # what the batched schedule charged
+    config_cycles_naive: int = 0      # what one-by-one dispatch would charge
+
+    @property
+    def config_cycles_saved(self) -> int:
+        return self.config_cycles_naive - self.config_cycles_paid
+
+
+class Handle:
+    """Future-like result slot for a submitted request."""
+
+    __slots__ = ("artifact", "inputs", "streams_changed", "layout",
+                 "pe_config_words", "_outputs", "_done")
+
+    def __init__(self, artifact: CompiledArtifact,
+                 inputs: Dict[str, np.ndarray], streams_changed: int,
+                 layout: Tuple[int, ...], pe_config_words: int):
+        self.artifact = artifact
+        self.inputs = inputs
+        self.streams_changed = streams_changed
+        self.layout = layout
+        self.pe_config_words = pe_config_words
+        self._outputs: Optional[Dict[str, np.ndarray]] = None
+        self._done = False
+
+    def result(self) -> Dict[str, np.ndarray]:
+        if not self._done:
+            raise ArtifactError("request not yet executed; call "
+                                "Engine.flush() first")
+        return self._outputs
+
+
+class Engine:
+    """One compile -> artifact -> run pipeline over a fixed fabric geometry.
+
+    Wraps a ``ShotRunner`` (owned or caller-provided) so existing cycle
+    accounting, per-class mapping reuse, and simulation memoization apply
+    unchanged; adds artifact compilation, the persistent cache, and the
+    batched request scheduler.
+    """
+
+    def __init__(self, fabric: Optional[Fabric] = None, backend: str = "sim",
+                 with_timing: bool = True,
+                 runner: Optional[ShotRunner] = None,
+                 cache: Optional[ArtifactCache] = None):
+        if backend not in ("sim", "pallas"):
+            raise ValueError(f"backend must be 'sim' or 'pallas', got "
+                             f"{backend!r}")
+        if runner is not None:
+            self.runner = runner
+            self.fabric = runner.fabric if fabric is None else fabric
+        else:
+            self.fabric = fabric or Fabric()
+            self.runner = ShotRunner(with_timing=with_timing,
+                                     fabric=self.fabric)
+        self.backend = backend
+        self.cache = cache if cache is not None else default_cache()
+        self.stats = EngineStats()
+        self._queue: List[Handle] = []
+
+    # -- compile -----------------------------------------------------------
+    def compile(self, fn_or_dfg, length: Optional[int] = None,
+                **kw) -> CompiledArtifact:
+        kw.setdefault("fabric", self.fabric)
+        kw.setdefault("backend", self.backend)
+        kw.setdefault("cache", self.cache)
+        return compiler.compile(fn_or_dfg, length, **kw)
+
+    # -- dispatch ----------------------------------------------------------
+    def submit(self, artifact: CompiledArtifact,
+               inputs: Dict[str, np.ndarray], *,
+               streams_changed: Optional[int] = None,
+               layout: Tuple[int, ...] = (),
+               pe_config_words: int = 0) -> Handle:
+        """Queue one request; execution happens at the next ``flush()``."""
+        self._check(artifact)
+        if streams_changed is None:
+            g = artifact.dfg
+            streams_changed = len(g.inputs) + len(g.outputs)
+        h = Handle(artifact, inputs, streams_changed, layout, pe_config_words)
+        self._queue.append(h)
+        return h
+
+    def flush(self) -> List[Handle]:
+        """Execute all queued requests, batched by config class."""
+        if not self._queue:
+            return []
+        queue, self._queue = self._queue, []
+        # stable group-by: classes keep first-arrival order, requests keep
+        # arrival order within their class
+        class_rank: Dict[str, int] = {}
+        for h in queue:
+            class_rank.setdefault(h.artifact.config_class, len(class_rank))
+        queue.sort(key=lambda h: class_rank[h.artifact.config_class])
+        for h in queue:
+            self._execute(h)
+        self.stats.flushes += 1
+        return queue
+
+    def run(self, artifact: CompiledArtifact,
+            inputs: Dict[str, np.ndarray], *,
+            streams_changed: Optional[int] = None,
+            layout: Tuple[int, ...] = (),
+            pe_config_words: int = 0) -> Dict[str, np.ndarray]:
+        """Naive per-request dispatch: execute now, assuming a cold fabric."""
+        h = self.submit(artifact, inputs, streams_changed=streams_changed,
+                        layout=layout, pe_config_words=pe_config_words)
+        self._queue.pop()
+        self.runner.invalidate_config()
+        self._execute(h)
+        return h.result()
+
+    # -- internals ---------------------------------------------------------
+    def _check(self, artifact: CompiledArtifact) -> None:
+        geo = compiler.geometry_of(self.fabric)
+        if artifact.geometry != geo:
+            raise ArtifactError(
+                f"{artifact.name}: artifact compiled for geometry "
+                f"{artifact.geometry}, engine fabric is {geo}")
+
+    def _execute(self, h: Handle) -> None:
+        art = h.artifact
+        before = self.runner.tally.config
+        if art.backend == "pallas":
+            # no cycle-accurate configuration model on this path: contribute
+            # to neither paid nor naive, so stats never report savings that
+            # batching didn't produce
+            h._outputs = self._run_pallas(art, h.inputs)
+            h._done = True
+            self.stats.requests += 1
+            return
+        self.stats.config_cycles_naive += art.config_cycles()
+        for shot in art.plan.shots:
+            self.runner.seed_mapping(shot.key, shot.mapping)
+        if art.n_shots == 1:
+            shot = art.plan.shots[0]
+            ins = {iname: np.asarray(h.inputs[iname], dtype=np.int32)
+                   for iname, _ in shot.inputs}
+            h._outputs = self.runner.run_shot(
+                shot.key, shot.dfg, ins, streams_changed=h.streams_changed,
+                pe_config_words=h.pe_config_words, layout=h.layout,
+                config_class=art.config_class)
+        else:
+            h._outputs = art.plan.run(h.inputs, runner=self.runner)
+        h._done = True
+        self.stats.requests += 1
+        self.stats.config_cycles_paid += self.runner.tally.config - before
+
+    def _run_pallas(self, art: CompiledArtifact,
+                    inputs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        g = art.dfg
+        if art.n_shots != 1 or g.back_edges() or \
+                any(n.is_reduction() for n in g.nodes.values()):
+            raise ArtifactError(
+                f"{art.name}: the pallas backend handles single-shot "
+                f"acyclic non-reduction DFGs; use backend='sim'")
+        import jax.numpy as jnp
+        from repro.kernels.fabric_stream import fabric_stream
+        jin = {k: jnp.asarray(v) for k, v in inputs.items()}
+        return {k: np.asarray(v) for k, v in fabric_stream(g, jin).items()}
+
+    # -- observability -----------------------------------------------------
+    @property
+    def tally(self) -> Tally:
+        return self.runner.tally
+
+    def pending(self) -> int:
+        return len(self._queue)

@@ -10,16 +10,24 @@
 
 Each call: trace the function to a jaxpr, look the jaxpr hash up in the
 compilation cache, and on a miss lower it to a DFG, place-and-route it (or
-partition it into a multi-shot plan when it exceeds the 4x4 fabric), then
+partition it into a multi-shot plan when it exceeds the fabric), then
 dispatch:
 
   * ``backend="sim"`` (default) — the cycle-accurate ``elastic_sim``:
     numeric results straight off the simulated OMNs, II / cycle / op counts
     on ``kernel.last`` for perf work;
   * ``backend="pallas"`` — the fused ``fabric_stream`` Pallas kernel
-    (throughput path; acyclic non-reduction graphs only);
+    (throughput path; acyclic non-reduction graphs only). No cycle-accurate
+    measurement exists on this path, so ``kernel.last.cycles`` reports the
+    engine's model estimate (config + re-arm + mapped II x length);
   * multi-shot plans always run through ``ShotRunner`` (config + re-arm
     cycle accounting on ``kernel.last.tally``).
+
+Compilation goes through the execution engine (``repro.engine``): the
+result is a ``CompiledArtifact`` in the *persistent* artifact cache, keyed
+on jaxpr hash x length x fabric geometry x backend — a warm cache survives
+the process, so repeat traffic skips place & route entirely. ``fabric=``
+targets a non-default geometry (e.g. ``Fabric(rows=6, cols=4)``).
 
 ``debug=True`` additionally executes the original JAX function and asserts
 the fabric results match — the numpy-level reference check.
@@ -32,16 +40,15 @@ arguments or build a fresh function per constant.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import dfg as D
 from repro.core.elastic_sim import SimResult, simulate
+from repro.core.fabric import Fabric
 from repro.core.mapper import Mapping
 from repro.core.multishot import ShotRunner, Tally
-from repro.frontend import partition
 from repro.frontend.tracer import FrontendError, trace
 
 BACKENDS = ("sim", "pallas")
@@ -55,6 +62,7 @@ class RunInfo:
     n_shots: int
     sim: Optional[SimResult] = None       # single-shot sim backend
     tally: Optional[Tally] = None         # multi-shot plans
+    est_cycles: Optional[int] = None      # model estimate (pallas backend)
 
     @property
     def ii(self) -> float:
@@ -64,24 +72,36 @@ class RunInfo:
 
     @property
     def cycles(self) -> int:
+        """Measured cycles where a simulation ran; the engine's model-based
+        estimate on the pallas backend — every backend reports a cost."""
         if self.sim is not None:
             return self.sim.cycles
         if self.tally is not None:
             return self.tally.total
-        raise FrontendError("no timing recorded (pallas backend)")
+        if self.est_cycles is not None:
+            return self.est_cycles
+        raise FrontendError("no timing recorded")
 
 
 @dataclasses.dataclass
 class CompiledKernel:
-    """A lowered + mapped kernel, cached by jaxpr hash."""
+    """A lowered + mapped kernel: a cached engine artifact plus the jax
+    output-structure info needed to repack results."""
 
     name: str
     length: int
-    dfg: D.DFG
-    plan: partition.Plan
+    artifact: Any                   # engine.CompiledArtifact
     out_shapes: List[Tuple[int, ...]]
     treedef: Any
     element_mode: bool = False      # traced per-element (lax.cond kernels)
+
+    @property
+    def dfg(self) -> D.DFG:
+        return self.artifact.dfg
+
+    @property
+    def plan(self) -> Any:          # frontend.partition.Plan
+        return self.artifact.plan
 
     @property
     def mapping(self) -> Mapping:
@@ -96,7 +116,8 @@ class OffloadedFunction:
 
     def __init__(self, fn: Callable, backend: str = "sim",
                  debug: bool = False, name: Optional[str] = None,
-                 mode: str = "auto"):
+                 mode: str = "auto", fabric: Optional[Fabric] = None,
+                 cache: Optional[Any] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
         self.fn = fn
@@ -104,6 +125,8 @@ class OffloadedFunction:
         self.debug = debug
         self.name = name or getattr(fn, "__name__", "offloaded")
         self.mode = mode
+        self.fabric = fabric or Fabric()
+        self._acache = cache            # engine ArtifactCache (None = default)
         self._cache: Dict[str, CompiledKernel] = {}
         self.cache_hits = 0
         self.cache_misses = 0
@@ -112,41 +135,6 @@ class OffloadedFunction:
         self.__name__ = self.name
 
     # -- compilation --------------------------------------------------------
-    def _jaxpr_key(self, length: int) -> Tuple[str, Any, bool]:
-        import jax
-        import jax.numpy as jnp
-        avals = [jax.ShapeDtypeStruct((length,), jnp.int32)
-                 for _ in self._arg_names()]
-        scalars = [jax.ShapeDtypeStruct((), jnp.int32)
-                   for _ in self._arg_names()]
-        # honour the kernel's trace mode so the recorded output shapes match
-        # what the tracer will actually lower
-        if self.mode == "element":
-            closed, out_shape = jax.make_jaxpr(
-                self.fn, return_shape=True)(*scalars)
-            element_mode = True
-        elif self.mode == "stream":
-            closed, out_shape = jax.make_jaxpr(
-                self.fn, return_shape=True)(*avals)
-            element_mode = False
-        else:
-            element_mode = False
-            try:
-                closed, out_shape = jax.make_jaxpr(
-                    self.fn, return_shape=True)(*avals)
-            except TypeError:
-                # lax.cond needs scalar operands; mirror the tracer's fallback
-                closed, out_shape = jax.make_jaxpr(
-                    self.fn, return_shape=True)(*scalars)
-                element_mode = True
-        # captured values (jnp scalars close over as constvars whose values
-        # are not part of the jaxpr text) must key the cache too
-        consts = [np.asarray(c).tolist() for c in closed.consts]
-        digest = hashlib.sha1(
-            f"{closed.jaxpr}|{consts}|{length}|{self.backend}"
-            .encode()).hexdigest()
-        return digest, out_shape, element_mode
-
     def _arg_names(self) -> List[str]:
         import inspect
         return [p.name for p in
@@ -154,22 +142,42 @@ class OffloadedFunction:
                 if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
 
     def compile(self, length: int) -> CompiledKernel:
-        """Trace + lower + map for streams of ``length`` (cached)."""
+        """Trace + lower + map for streams of ``length``.
+
+        Two cache layers: a per-function dict holding the repack metadata,
+        and the engine's persistent artifact cache underneath (shared across
+        functions and across processes)."""
         import jax
-        key, out_shape, element_mode = self._jaxpr_key(length)
+
+        from repro.engine import cache as ecache
+        from repro.engine import compiler as ecompiler
+
+        geometry = ecompiler.geometry_of(self.fabric)
+        key, out_shape, element_mode = ecompiler.fn_cache_key(
+            self.fn, length, self.mode, self.backend, geometry,
+            self._arg_names())
         hit = self._cache.get(key)
         if hit is not None:
             self.cache_hits += 1
             return hit
-        self.cache_misses += 1
-        g = trace(self.fn, length, name=self.name, mode=self.mode)
-        pl = partition.plan(g)
+        acache = self._acache if self._acache is not None \
+            else ecache.default_cache()
+        art = acache.get(key)
+        if art is not None:
+            self.cache_hits += 1            # persistent-cache hit: no P&R
+        else:
+            self.cache_misses += 1
+            g = trace(self.fn, length, name=self.name, mode=self.mode)
+            art = ecompiler.build_artifact(
+                g, key, self.fabric, self.backend, name=self.name,
+                length=length, element_mode=element_mode)
+            acache.put(art)
         leaves, treedef = jax.tree_util.tree_flatten(out_shape)
         # an element-mode jaxpr describes one stream element: its scalar
         # outputs are full streams of ``length`` at run time
         shapes = [(length,) if element_mode else tuple(l.shape)
                   for l in leaves]
-        ck = CompiledKernel(self.name, length, g, pl, shapes, treedef,
+        ck = CompiledKernel(self.name, length, art, shapes, treedef,
                             element_mode)
         self._cache[key] = ck
         return ck
@@ -191,7 +199,7 @@ class OffloadedFunction:
         if ck.plan.n_shots == 1:
             outs, info = self._run_single(ck, inputs)
         else:
-            runner = ShotRunner(with_timing=True)
+            runner = ShotRunner(with_timing=True, fabric=self.fabric)
             outs = ck.plan.run(inputs, runner=runner)
             info = RunInfo("sim", ck.plan.n_shots, tally=runner.tally)
         self.last = info
@@ -213,7 +221,8 @@ class OffloadedFunction:
             from repro.kernels.fabric_stream import fabric_stream
             jin = {k: jnp.asarray(v) for k, v in inputs.items()}
             outs = {k: np.asarray(v) for k, v in fabric_stream(g, jin).items()}
-            return outs, RunInfo("pallas", 1)
+            est = ck.artifact.model_cycles(ck.length)
+            return outs, RunInfo("pallas", 1, est_cycles=est)
         sim = simulate(ck.mapping, inputs)
         return dict(sim.outputs), RunInfo("sim", 1, sim=sim)
 
@@ -246,13 +255,14 @@ class OffloadedFunction:
 
 def offload(fn: Optional[Callable] = None, *, backend: str = "sim",
             debug: bool = False, name: Optional[str] = None,
-            mode: str = "auto"):
+            mode: str = "auto", fabric: Optional[Fabric] = None,
+            cache: Optional[Any] = None):
     """Decorator: compile a Python int32-stream function onto the fabric.
 
     Usable bare (``@offload``) or parameterized
-    (``@offload(backend="pallas", debug=True)``).
+    (``@offload(backend="pallas", debug=True, fabric=Fabric(rows=6))``).
     """
     def wrap(f: Callable) -> OffloadedFunction:
         return OffloadedFunction(f, backend=backend, debug=debug, name=name,
-                                 mode=mode)
+                                 mode=mode, fabric=fabric, cache=cache)
     return wrap(fn) if fn is not None else wrap

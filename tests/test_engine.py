@@ -1,0 +1,224 @@
+"""Execution-engine tests: compile -> artifact -> run pipeline, the
+persistent artifact cache, and config-class batching.
+
+Acceptance criterion (ISSUE 2): a batched engine run of >= 8 requests
+sharing a config class must report strictly fewer total re-arm+config
+cycles in its Tally than the same requests dispatched one-by-one.
+"""
+import numpy as np
+import pytest
+
+from repro.core import kernels_lib as K
+from repro.core.executor import execute
+from repro.core.fabric import Fabric
+from repro.engine import (ArtifactCache, ArtifactError, CompiledArtifact,
+                          Engine)
+from repro.engine.artifact import SCHEMA_VERSION
+
+rng = np.random.default_rng(7)
+
+
+def _streams(n, length=32):
+    return [rng.integers(-50, 50, length).astype(np.int32) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# config-class batching
+# ---------------------------------------------------------------------------
+
+def test_batched_beats_naive_dispatch():
+    """The acceptance run: 8 same-config-class requests, batched vs naive."""
+    xs = _streams(8)
+
+    batched = Engine(cache=ArtifactCache(memory_only=True))
+    art = batched.compile(K.relu())
+    handles = [batched.submit(art, {"x": x}) for x in xs]
+    batched.flush()
+    for h, x in zip(handles, xs):
+        np.testing.assert_array_equal(h.result()["out"], np.maximum(x, 0))
+
+    naive = Engine(cache=ArtifactCache(memory_only=True))
+    art_n = naive.compile(K.relu())
+    for x in xs:
+        out = naive.run(art_n, {"x": x})
+        np.testing.assert_array_equal(out["out"], np.maximum(x, 0))
+
+    cost_batched = batched.tally.config + batched.tally.rearm
+    cost_naive = naive.tally.config + naive.tally.rearm
+    assert cost_batched < cost_naive
+    # the fabric is configured once for the whole batch vs once per request
+    assert batched.tally.config == art.config_cycles()
+    assert naive.tally.config == 8 * art.config_cycles()
+    # stats expose the same saving for observability
+    assert batched.stats.config_cycles_saved == 7 * art.config_cycles()
+
+
+def test_flush_groups_interleaved_classes():
+    """Interleaved traffic from two config classes pays one configuration
+    per class, not one per request."""
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    relu = eng.compile(K.relu())
+    vadd = eng.compile(K.vadd())
+    xs, ys = _streams(4), _streams(4)
+    hs = []
+    for x, y in zip(xs, ys):            # worst-case arrival order: A B A B...
+        hs.append(eng.submit(relu, {"x": x}))
+        hs.append(eng.submit(vadd, {"x": x, "y": y}))
+    eng.flush()
+    assert eng.tally.config == relu.config_cycles() + vadd.config_cycles()
+    for h in hs:
+        out = h.result()
+        ref = execute(h.artifact.dfg, h.inputs)
+        for k, v in ref.items():
+            np.testing.assert_array_equal(out[k], v)
+
+
+def test_handle_result_before_flush_raises():
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    art = eng.compile(K.relu())
+    h = eng.submit(art, {"x": _streams(1)[0]})
+    with pytest.raises(ArtifactError, match="flush"):
+        h.result()
+    eng.flush()
+    assert h.result()["out"].shape == (32,)
+
+
+# ---------------------------------------------------------------------------
+# artifact + persistent cache
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_disk_cache(tmp_path):
+    cache = ArtifactCache(root=str(tmp_path))
+    eng = Engine(cache=cache)
+    art = eng.compile(K.mac1(16))
+    assert cache.misses == 1 and cache.stats()["entries"] == 1
+
+    # a fresh cache over the same root serves the artifact from disk —
+    # the place & route survives the process
+    cache2 = ArtifactCache(root=str(tmp_path))
+    hit = cache2.get(art.key)
+    assert hit is not None and cache2.disk_hits == 1
+    assert hit.key == art.key
+    assert hit.config_class == art.config_class
+    assert hit.plan.shots[0].mapping.place == art.plan.shots[0].mapping.place
+
+    # the revived artifact is runnable
+    eng2 = Engine(cache=cache2)
+    ins = {"a": np.arange(16, dtype=np.int32),
+           "b0": np.ones(16, dtype=np.int32)}
+    out = eng2.run(hit, ins)
+    np.testing.assert_array_equal(out["out0"], execute(K.mac1(16), ins)["out0"])
+
+
+def test_artifact_bytes_schema_guard():
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    art = eng.compile(K.relu())
+    clone = CompiledArtifact.from_bytes(art.to_bytes())
+    assert clone.key == art.key
+    clone.schema = SCHEMA_VERSION + 1
+    with pytest.raises(ArtifactError, match="schema"):
+        CompiledArtifact.from_bytes(clone.to_bytes())
+
+
+def test_corrupt_cache_entry_behaves_as_miss(tmp_path):
+    cache = ArtifactCache(root=str(tmp_path))
+    eng = Engine(cache=cache)
+    art = eng.compile(K.relu())
+    path = cache._path(art.key)
+    with open(path, "wb") as f:
+        f.write(b"not a pickle")
+    fresh = ArtifactCache(root=str(tmp_path))
+    assert fresh.get(art.key) is None
+    assert not __import__("os").path.exists(path)   # corrupt entry dropped
+
+
+def test_cache_key_distinguishes_geometry_and_backend():
+    cache = ArtifactCache(memory_only=True)
+    a44 = Engine(cache=cache).compile(K.relu())
+    a33 = Engine(fabric=Fabric(3, 3, 3, 3), cache=cache).compile(K.relu())
+    ap = Engine(backend="pallas", cache=cache).compile(K.relu())
+    assert len({a44.key, a33.key, ap.key}) == 3
+
+
+def test_cache_key_distinguishes_pe_limit():
+    """A pe_limit compile must not be served an unrestricted artifact."""
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    free = eng.compile(K.axpby(3, 5))
+    tight = eng.compile(K.axpby(3, 5), pe_limit=1)
+    assert free.key != tight.key
+    assert free.n_shots == 1 and tight.n_shots > 1
+    for shot in tight.plan.shots:
+        assert shot.dfg.n_pes_used() <= 1
+
+
+def test_default_cache_respects_strela_cache_0(monkeypatch, tmp_path):
+    """STRELA_CACHE=0 (set by conftest) must actually disable the implicit
+    disk layer, and default_cache() must return a stable instance."""
+    from repro.engine import cache as ecache
+    monkeypatch.setattr(ecache, "_default", None)
+    monkeypatch.setenv("STRELA_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("STRELA_CACHE", "0")
+    c = ecache.default_cache()
+    assert c.memory_only
+    assert ecache.default_cache() is c
+    Engine(cache=c).compile(K.relu())
+    assert list(tmp_path.iterdir()) == []     # nothing written to disk
+    monkeypatch.setenv("STRELA_CACHE", "1")
+    c2 = ecache.default_cache()
+    assert c2 is not c and not c2.memory_only
+
+
+# ---------------------------------------------------------------------------
+# dispatch guards + cost model
+# ---------------------------------------------------------------------------
+
+def test_geometry_mismatch_raises():
+    cache = ArtifactCache(memory_only=True)
+    art = Engine(cache=cache).compile(K.relu())
+    eng33 = Engine(fabric=Fabric(3, 3, 3, 3), cache=cache)
+    with pytest.raises(ArtifactError, match="geometry"):
+        eng33.run(art, {"x": _streams(1)[0]})
+
+
+def test_compile_traced_function_runs_and_matches_numpy():
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    art = eng.compile(lambda x, y: 3 * x + 5 * y, length=32, name="axpby35")
+    x, y = _streams(2)
+    out = eng.run(art, {"x": x, "y": y})
+    np.testing.assert_array_equal(out["out0"], 3 * x + 5 * y)
+
+
+def test_model_cycles_scale_with_length():
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    art = eng.compile(K.relu())
+    c64, c256 = art.model_cycles(64), art.model_cycles(256)
+    assert 0 < c64 < c256
+    assert c256 - c64 >= 192        # at least II=1 per extra element
+
+
+def test_pallas_dispatch_reports_no_fabricated_savings():
+    """The pallas path has no configuration cost model; stats must not
+    invent batching savings for it."""
+    eng = Engine(backend="pallas", cache=ArtifactCache(memory_only=True))
+    art = eng.compile(K.relu())
+    for x in _streams(3):
+        np.testing.assert_array_equal(eng.run(art, {"x": x})["out"],
+                                      np.maximum(x, 0))
+    assert eng.stats.requests == 3
+    assert eng.stats.config_cycles_naive == 0
+    assert eng.stats.config_cycles_saved == 0
+
+
+def test_pallas_backend_reports_model_cycles():
+    """Satellite: RunInfo.cycles must not raise on the pallas backend."""
+    jax = pytest.importorskip("jax")
+    from repro.frontend import offload
+
+    @offload(backend="pallas")
+    def scale3(x):
+        return x * 3
+
+    x = _streams(1)[0]
+    np.testing.assert_array_equal(scale3(x), 3 * x)
+    assert scale3.last.backend == "pallas"
+    assert scale3.last.cycles > 0

@@ -1,0 +1,116 @@
+"""Parameterized fabric geometry: non-4x4 arrays must map, route, and
+simulate with results matching the functional-executor oracle, and the
+partitioner must respect arbitrary PE/IMN/OMN budgets (property-tested).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_stub import given, settings, st
+
+from repro.core import dfg as D
+from repro.core import kernels_lib as K
+from repro.core.elastic_sim import simulate
+from repro.core.executor import execute
+from repro.core.fabric import Fabric
+from repro.core.isa import AluOp
+from repro.core.mapper import MappingError, map_dfg
+from repro.frontend.partition import plan
+
+rng = np.random.default_rng(11)
+
+GEOMETRIES = [Fabric(3, 3, 3, 3), Fabric(4, 6, 4, 4), Fabric(6, 4, 4, 4)]
+GEO_IDS = ["3x3", "4x6", "6x4"]
+
+
+def _inputs_for(g: D.DFG, length: int = 24):
+    return {name: rng.integers(-40, 40, length).astype(np.int32)
+            for name in g.inputs}
+
+
+@pytest.mark.parametrize("fabric", GEOMETRIES, ids=GEO_IDS)
+@pytest.mark.parametrize("kernel", [K.relu, lambda: K.mac1(24)],
+                         ids=["relu", "mac1"])
+def test_kernel_maps_and_simulates_on_geometry(fabric, kernel):
+    g = kernel()
+    m = map_dfg(g, fabric, restarts=200)
+    assert m.fabric is fabric
+    for (r, c) in m.place.values():
+        assert 0 <= r < fabric.rows and 0 <= c < fabric.cols
+    ins = _inputs_for(g)
+    sim = simulate(m, ins)
+    ref = execute(g, ins)
+    for name in g.outputs:
+        np.testing.assert_array_equal(sim.outputs[name], ref[name])
+
+
+@pytest.mark.parametrize("fabric", GEOMETRIES, ids=GEO_IDS)
+def test_oversized_kernel_partitions_on_geometry(fabric):
+    """A graph bigger than the target array splits into shots that each fit
+    it, and the plan's results still match the oracle."""
+    b = D.DFG.build("deep_chain")
+    prev = b.inp("x")
+    n = fabric.rows * fabric.cols + 5
+    for i in range(n):
+        prev = b.alu(f"a{i}", AluOp.ADD, prev, const_b=i + 1)
+    b.out("out", prev)
+    g = b.done()
+    pl = plan(g, fabric, restarts=120)
+    assert pl.n_shots > 1
+    for shot in pl.shots:
+        assert shot.dfg.n_pes_used() <= fabric.rows * fabric.cols
+        assert len(shot.dfg.inputs) <= fabric.n_imns
+        assert len(shot.dfg.outputs) <= fabric.n_omns
+        assert shot.mapping.fabric is fabric
+    x = rng.integers(-50, 50, 24).astype(np.int32)
+    outs = pl.run({"x": x}, with_timing=False)
+    np.testing.assert_array_equal(outs["out"], execute(g, {"x": x})["out"])
+
+
+def test_too_many_inputs_for_imn_budget_raises():
+    g = K.fft_butterfly()                      # 4 inputs, 4 outputs
+    with pytest.raises(MappingError, match="inputs"):
+        map_dfg(g, Fabric(4, 4, n_imns=3, n_omns=4), restarts=5)
+
+
+# ---------------------------------------------------------------------------
+# property: the partitioner honours arbitrary resource budgets
+# ---------------------------------------------------------------------------
+
+def _chain(n_alu: int, two_inputs: bool) -> D.DFG:
+    b = D.DFG.build(f"chain{n_alu}")
+    x = b.inp("x")
+    y = b.inp("y") if two_inputs else None
+    prev = x
+    for i in range(n_alu):
+        if y is not None and i % 3 == 1:
+            prev = b.alu(f"a{i}", AluOp.ADD, prev, y)
+        else:
+            prev = b.alu(f"a{i}", AluOp.MUL, prev, const_b=(i % 5) + 1)
+    b.out("out", prev)
+    return b.done()
+
+
+@settings(max_examples=12, deadline=None)
+@given(n_alu=st.integers(min_value=2, max_value=14),
+       pe_limit=st.integers(min_value=2, max_value=8),
+       n_imns=st.integers(min_value=2, max_value=4),
+       n_omns=st.integers(min_value=1, max_value=4),
+       two_inputs=st.booleans())
+def test_partition_respects_arbitrary_budgets(n_alu, pe_limit, n_imns,
+                                              n_omns, two_inputs):
+    g = _chain(n_alu, two_inputs)
+    fabric = Fabric(4, 4, n_imns=n_imns, n_omns=n_omns)
+    pl = plan(g, fabric, restarts=60, pe_limit=pe_limit)
+    for shot in pl.shots:
+        assert shot.dfg.n_pes_used() <= pe_limit
+        assert len(shot.dfg.inputs) <= n_imns
+        assert len(shot.dfg.outputs) <= n_omns
+    x = rng.integers(-20, 20, 16).astype(np.int32)
+    ins = {"x": x}
+    if two_inputs:
+        ins["y"] = rng.integers(-20, 20, 16).astype(np.int32)
+    outs = pl.run(dict(ins), with_timing=False)
+    np.testing.assert_array_equal(outs["out"], execute(g, ins)["out"])
