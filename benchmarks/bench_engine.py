@@ -35,11 +35,23 @@ _KERNELS: Dict[str, Callable[[int], DFG]] = {
     "axpby": lambda n: K.axpby(3, 5),
     "mac1": lambda n: K.mac1(n),
     "fft": lambda n: K.fft_butterfly(),
+    # irregular loops: data-dependent trip counts, verified drain-by-
+    # token-exhaustion; their II is data-dependent, so the reported model
+    # estimate is a per-iteration lower bound
+    "div_loop": lambda n: K.div_loop(7),
+    "clip_scan": lambda n: _traced(K.clip_scan_fn(-40, 40), n, "clip_scan"),
+    "div_iter": lambda n: _traced(K.loop_div_fn(7), n, "div_iter"),
 }
 
 
+def _traced(fn, length: int, name: str) -> DFG:
+    from repro.frontend import trace
+    return trace(fn, length, name=name)
+
+
 def _inputs(g: DFG, length: int, rng) -> Dict[str, np.ndarray]:
-    return {name: rng.integers(-64, 64, length).astype(np.int32)
+    lo, hi = (0, 100) if g.has_recirculation() else (-64, 64)
+    return {name: rng.integers(lo, hi, length).astype(np.int32)
             for name in g.inputs}
 
 

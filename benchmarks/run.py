@@ -89,8 +89,10 @@ def main() -> None:
               f"perf_mops={r['perf_mops']:.1f};paper_err="
               f"{r['cycles_err']:+.3f}")
     for r in bench_kernels.run():
-        print(f"kernel_{r['kernel']},{r['us_xla_cpu']:.3f},"
-              f"tpu_roofline_us={r['tpu_roofline_us']:.3f}")
+        est = (f"tpu_roofline_us={r['tpu_roofline_us']:.3f}"
+               if "tpu_roofline_us" in r
+               else f"fabric_sim_us={r['fabric_sim_us']:.3f}")
+        print(f"kernel_{r['kernel']},{r['us_xla_cpu']:.3f},{est}")
     for r in engine_rows:
         us = r["cycles_batched"] / clock
         print(f"engine_{r['kernel']},{us:.3f},"

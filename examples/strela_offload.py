@@ -84,4 +84,40 @@ info = epilogue.last
 print(f"[frontend] traced epilogue: {info.n_shots} shot(s), backend "
       f"{info.backend}, II={info.ii:.2f}, {info.cycles} cycles "
       f"(cache {epilogue.cache_info()})")
+
+# ---------------------------------------------------------------------------
+# irregular loops: a data-dependent trip count per element (lax.while_loop
+# lowered onto gated Branch/Merge recirculation, drained by token exhaustion)
+# ---------------------------------------------------------------------------
+from jax import lax
+
+
+@offload(debug=True)
+def normalize(v):
+    """Shift each |w| value right until it fits in 6 bits — the trip count
+    depends on the data, the paper's 'irregular loop' scenario."""
+    def cond(c):
+        shifts, x = c
+        return x > 63
+
+    def body(c):
+        shifts, x = c
+        return shifts + 1, x >> 1
+
+    return lax.while_loop(cond, body, (0, jnp.where(v > 0, v, -v)))
+
+
+shifts, mag = normalize(w_traced)
+ref_mag = np.abs(np.asarray(w_traced))
+ref_shifts = np.zeros_like(ref_mag)
+while (ref_mag > 63).any():
+    ref_shifts[ref_mag > 63] += 1
+    ref_mag[ref_mag > 63] >>= 1
+assert np.array_equal(np.asarray(mag), ref_mag)
+assert np.array_equal(np.asarray(shifts), ref_shifts)
+li = normalize.last
+ii = f"II={li.ii:.1f} (data-dependent)" if li.n_shots == 1 \
+    else f"{li.n_shots} shots (loop body kept atomic)"
+print(f"[loops] traced while_loop kernel: {ii}, {li.cycles} cycles for "
+      f"{len(ref_mag)} elements, max trip {int(ref_shifts.max())}")
 print("strela_offload OK")

@@ -66,7 +66,10 @@ class Edge:
     dst_port: str            # "a" | "b" | "ctrl"
     back: bool = False       # loop-carried (non-immediate feedback loop):
                              #   consumer sees the producer's *previous* token
-    init: int = 0            # initial token on a back edge (register init)
+    init: Optional[int] = 0  # initial token on a back edge (register init);
+                             #   None = *recirculation* edge of a
+                             #   data-dependent loop: no initial token, the
+                             #   consumer waits for the first real one
 
 
 @dataclasses.dataclass
@@ -112,6 +115,40 @@ class DFG:
 
     def back_edges(self) -> List[Edge]:
         return [e for e in self.edges if e.back]
+
+    def has_recirculation(self) -> bool:
+        """True if the graph contains a data-dependent loop: a back edge with
+        no initial token (``init is None``), i.e. a token recirculates through
+        Branch/Merge until its loop predicate releases it. Such graphs have
+        data-dependent firing counts and need token-driven execution."""
+        return any(e.back and e.init is None for e in self.edges)
+
+    def recirculation_nodes(self) -> set:
+        """Functional nodes inside any data-dependent loop body: everything
+        on a forward path consumer ->* producer of a recirculation edge."""
+        fwd: Dict[str, List[str]] = {n: [] for n in self.nodes}
+        rev: Dict[str, List[str]] = {n: [] for n in self.nodes}
+        for e in self.edges:
+            if not e.back:
+                fwd[e.src].append(e.dst)
+                rev[e.dst].append(e.src)
+
+        def _reach(start: str, adj: Dict[str, List[str]]) -> set:
+            seen, stack = {start}, [start]
+            while stack:
+                for nxt in adj[stack.pop()]:
+                    if nxt not in seen:
+                        seen.add(nxt)
+                        stack.append(nxt)
+            return seen
+
+        body: set = set()
+        for e in self.edges:
+            if e.back and e.init is None:
+                members = _reach(e.dst, fwd) & _reach(e.src, rev)
+                members.update((e.src, e.dst))
+                body |= members
+        return body
 
     def topo_order(self) -> List[str]:
         """Topological order ignoring back edges (loop-carried state) and
@@ -195,9 +232,13 @@ class DFG:
         for _ in range(rounds):
             nxt: Dict[str, str] = {}
             for name in self.nodes:
+                # e.init discriminates: recirculation (None) vs register
+                # init value — different machines, different fingerprints
                 ins = sorted(f"i:{e.dst_port}<{e.src_port}:{int(e.back)}:"
+                             f"{e.init if e.back else ''}:"
                              f"{label[e.src]}" for e in self.in_edges(name))
                 outs = sorted(f"o:{e.src_port}>{e.dst_port}:{int(e.back)}:"
+                              f"{e.init if e.back else ''}:"
                               f"{label[e.dst]}" for e in self.out_edges(name))
                 nxt[name] = label[name] + "|" + ";".join(ins + outs)
             label = nxt
@@ -290,9 +331,10 @@ class DFGBuilder:
              back: bool = False, init: int = 0) -> None:
         self.edges.append(Edge(src, src_port, dst, dst_port, back, init))
 
-    def back_edge(self, src: str, dst: str, dst_port: str, init: int = 0,
-                  src_port: str = "out") -> None:
-        """Loop-carried edge: dst consumes src's previous-iteration token."""
+    def back_edge(self, src: str, dst: str, dst_port: str,
+                  init: Optional[int] = 0, src_port: str = "out") -> None:
+        """Loop-carried edge: dst consumes src's previous-iteration token.
+        ``init=None`` makes it a recirculation edge (no initial token)."""
         self.edges.append(Edge(src, src_port, dst, dst_port, True, init))
 
     def done(self) -> DFG:
@@ -339,6 +381,13 @@ def unroll_chained(dfg: DFG, factor: int) -> DFG:
     """
     if factor <= 1:
         return dfg
+    if dfg.has_recirculation():
+        # a recirculation edge is not per-element state: chaining it across
+        # lanes would feed lane k's mid-iteration tokens into lane k+1's
+        # entry merge. Gated loops unroll as independent lanes instead.
+        raise ValueError(
+            f"{dfg.name}: cross-lane state chaining is undefined for "
+            f"data-dependent loops (recirculation back edges); use unroll()")
     backs = dfg.back_edges()
     nodes: Dict[str, Node] = {}
     edges: List[Edge] = []

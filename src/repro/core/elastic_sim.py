@@ -21,6 +21,12 @@ The simulator executes the *mapped* netlist token-by-token, so measured
 initiation intervals include real routing hops and bank conflicts — this is
 what reproduces Table I's outputs/cycle (fft 1.95, dither II=4) rather than
 assuming them.
+
+Termination: kernels with static token counts finish when every OMN received
+its expected stream. Data-dependent loops (Branch/Merge recirculation, back
+edges with ``init=None``) have no static expectation — they finish by *token
+exhaustion*: the IMN streams drain and the elastic network quiesces, the
+condition on which the real hardware raises its end-of-kernel interrupt.
 """
 from __future__ import annotations
 
@@ -34,7 +40,7 @@ from repro.core import dfg as D
 from repro.core.executor import alu_eval, cmp_eval
 from repro.core.fabric import FU_INS, FU_OUT, Res
 from repro.core.isa import AluOp
-from repro.core.mapper import Mapping, Signal
+from repro.core.mapper import FU_PORT_OF, Mapping, Signal
 from repro.core.streams import BankArbiter, BusConfig, StreamSpec
 
 EB_CAP = 2          # 2-slot elastic buffers
@@ -172,6 +178,12 @@ def simulate(m: Mapping, inputs: Dict[str, np.ndarray],
                          if res.port == "OMN" else res_station.get((sig, res)))
                 parent_sid = station_of(sig, par)
                 if child is not None and child not in stations[parent_sid].succs:
+                    if stations[parent_sid].kind == "FUOUT":
+                        # the Branch leg filter applies at the FU output
+                        # register: a child fed *directly* by it (e.g. an
+                        # OMN in the producer's own column) must carry the
+                        # signal's leg, not the station-creation default
+                        stations[child].leg = sig[1]
                     stations[parent_sid].succs.append(child)
 
     # FU semantics tables
@@ -183,12 +195,17 @@ def simulate(m: Mapping, inputs: Dict[str, np.ndarray],
                         for p, fp in (("a", "FU_A"), ("b", "FU_B"),
                                       ("ctrl", "FU_C"))}
 
-    # initial tokens for loop-carried signals (register init values, Sec. III-C)
-    init_of: Dict[str, int] = {}
+    # initial tokens for loop-carried signals (register init values, Sec.
+    # III-C). The init lives at the *consumer's* FU input (data_reg_init +
+    # valid_reg_init of that PE), so it must not fork to the producer's
+    # other consumers — e.g. a scan carry that is also a kernel output.
+    # Recirculation edges (init=None) start empty: the first token to
+    # circulate is a real stream element admitted by the loop's gate.
     for e in g.back_edges():
-        init_of.setdefault(e.src, e.init)
-    for n, v in init_of.items():
-        stations[fuout_station[n]].q.append((np.int64(v), frozenset(("out",))))
+        if e.init is None:
+            continue
+        sid = fu_in_station[(e.dst, FU_PORT_OF[e.dst_port])]
+        stations[sid].q.append((np.int64(e.init), frozenset(("out",))))
 
     # reduction accumulators
     accs = {n: np.int64(nd.acc_init) for n, nd in fu_nodes.items()
@@ -198,11 +215,18 @@ def simulate(m: Mapping, inputs: Dict[str, np.ndarray],
     # IMN/OMN progress
     imn_sent = {name: 0 for name in g.inputs}
     omn_recv: Dict[str, List[Tuple[int, int]]] = {name: [] for name in g.outputs}
+    # Token-exhaustion termination (data-dependent loops): a recirculating
+    # graph's output token counts depend on runtime predicates (an exit leg
+    # may fire once per element, a discarded leg never), so no static
+    # expectation exists. Completion is instead declared when the input
+    # streams are exhausted AND the elastic network quiesces — exactly when
+    # real hardware raises its end-of-kernel interrupt (Sec. V-B).
+    data_dependent = g.has_recirculation()
     expected: Dict[str, int] = {}
     for name in g.outputs:
         producer = g.operand(name, "a").src
         nd = g.nodes[producer]
-        if g.nodes[name].emit_every == 0:
+        if data_dependent or g.nodes[name].emit_every == 0:
             # last-value OMN: token count equals producer emissions (+ any
             # init token that reaches it); completion is tracked by IMN drain.
             expected[name] = -1
@@ -272,7 +296,16 @@ def simulate(m: Mapping, inputs: Dict[str, np.ndarray],
         while not settled:
             settled = True
             for st in stations:
-                if st.kind in ("EB", "IMN", "FUOUT") and st.q and st.succs:
+                if st.kind in ("EB", "IMN", "FUOUT") and st.q:
+                    if not st.succs:
+                        if st.kind == "FUOUT":
+                            # empty Fork-Sender mask: the FU result is
+                            # deliberately discarded (find2min drops its
+                            # loser this way, Sec. VI-B) — never backpressure
+                            st.q.popleft()
+                            settled = False
+                            progress = True
+                        continue
                     value, legs = st.q[0]
                     if succs_ready(st, legs):
                         st.q.popleft()

@@ -1,13 +1,21 @@
 """Functional (un-timed) execution of STRELA DFGs — the semantic oracle.
 
-Two paths:
+Three paths:
   * **vectorized** — acyclic graphs (optionally with reductions that feed only
     OUTPUT nodes): NumPy evaluation over the whole stream at once.
   * **loop** — graphs with loop-carried back edges (dither, find2min) or
     reductions consumed by interior nodes: per-token interpretation, exactly
-    mirroring the elastic token semantics.
+    mirroring the elastic token semantics. Every node fires exactly once per
+    stream element.
+  * **token** — graphs with *recirculation* (a back edge with ``init=None``,
+    the data-dependent-loop schema the frontend emits for ``lax.while_loop``):
+    a token-driven interpreter with per-edge FIFOs. Nodes fire whenever their
+    joined inputs hold tokens, so an element can circulate through a
+    Branch/Merge loop a data-dependent number of times before its exit token
+    is released. Execution terminates by *token exhaustion*: the network is
+    run to quiescence after the input streams drain.
 
-Both use a wrapping 32-bit integer datapath (the fabric's ALU width).
+All use a wrapping 32-bit integer datapath (the fabric's ALU width).
 The cycle-accurate timing lives in ``elastic_sim``; this module defines *what*
 a mapped kernel computes, and is the reference for the Pallas kernels and the
 fidelity checks of the elastic simulator itself.
@@ -84,6 +92,8 @@ def execute(g: D.DFG, inputs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
     if len(lengths) != 1:
         raise ValueError(f"all input streams must share a length, got {lengths}")
     (length,) = lengths
+    if g.has_recirculation():
+        return _execute_tokens(g, arrays, length)
     if _needs_loop(g):
         return _execute_loop(g, arrays, length)
     return _execute_vectorized(g, arrays, length)
@@ -300,6 +310,150 @@ def _execute_loop(g, arrays, length):
         if g.nodes[o].emit_every == 0:
             outputs[o] = np.array([last_vals[o]] if last_vals[o] is not None else [],
                                   dtype=I32)
+        else:
+            outputs[o] = np.array(out_streams[o], dtype=I32)
+    return outputs
+
+
+# ---------------------------------------------------------------------------
+# token path (data-dependent loops: Branch/Merge recirculation)
+# ---------------------------------------------------------------------------
+
+def _execute_tokens(g: D.DFG, arrays, length: int,
+                    max_firings: Optional[int] = None):
+    """Un-timed token-driven interpretation with per-edge FIFO queues.
+
+    Mirrors the elastic fabric's firing rules without the timing: a node
+    fires when every connected input port holds a token (MERGE: either
+    port, priority a), consuming one token per port and forking its result
+    to every consumer edge. Back edges with an ``init`` value seed one
+    initial token; recirculation edges (``init=None``) start empty. The
+    run terminates when the network quiesces with all input tokens
+    injected — the token-exhaustion rule; a firing budget guards against
+    a loop whose predicate never releases its token."""
+    from collections import deque
+
+    if max_firings is None:
+        max_firings = 10_000 * (length + 1) * max(len(g.nodes), 1)
+
+    # one FIFO per consumer port, keyed (dst, dst_port); producers fork
+    # to every edge leaving (src, src_port)
+    in_q: Dict[Tuple[str, str], deque] = {}
+    consumers: Dict[Tuple[str, str], List[Tuple[str, str]]] = {}
+    for e in g.edges:
+        in_q[(e.dst, e.dst_port)] = deque()
+        consumers.setdefault((e.src, e.src_port), []).append(
+            (e.dst, e.dst_port))
+    for e in g.back_edges():
+        if e.init is not None:
+            in_q[(e.dst, e.dst_port)].append(np.int64(e.init))
+
+    def emit(src: str, port: str, value) -> None:
+        for key in consumers.get((src, port), ()):
+            in_q[key].append(np.int64(value))
+
+    for name in g.inputs:
+        for t in range(length):
+            emit(name, "out", np.int64(arrays[name][t]))
+    for n in g.nodes.values():
+        if n.kind == D.CONST:
+            # CONST paces one token per stream element (as in the loop path);
+            # a const *inside* a recirculation body would need one token per
+            # iteration instead, which no fabric stream can provide
+            if n.name in g.recirculation_nodes():
+                raise ValueError(
+                    f"{g.name}: CONST node {n.name} inside a recirculation "
+                    f"loop body; fold it into a PE constant")
+            for _ in range(length):
+                emit(n.name, "out", np.int64(n.value))
+
+    accs = {n.name: np.int64(n.acc_init) for n in g.nodes.values()
+            if n.is_reduction()}
+    acc_count = {n: 0 for n in accs}
+    out_streams: Dict[str, List[int]] = {o: [] for o in g.outputs}
+    last_vals: Dict[str, Optional[int]] = {o: None for o in g.outputs}
+
+    order = [n for n in g.topo_order()
+             if g.nodes[n].kind not in (D.INPUT,)]
+    firings = 0
+
+    def q(name: str, port: str) -> Optional[deque]:
+        return in_q.get((name, port))
+
+    def ready(dq: Optional[deque]) -> bool:
+        return dq is not None and len(dq) > 0
+
+    progress = True
+    while progress:
+        progress = False
+        for name in order:
+            n = g.nodes[name]
+            aq, bq, cq = q(name, "a"), q(name, "b"), q(name, "ctrl")
+            if n.kind == D.CONST:
+                continue          # folded into consumers as PE constants
+            if n.kind == D.MERGE:
+                if not (ready(aq) or ready(bq)):
+                    continue
+                src = aq if ready(aq) else bq
+                emit(name, "out", src.popleft())
+            elif n.kind == D.OUTPUT:
+                if not ready(aq):
+                    continue
+                v = int(wrap32(aq.popleft()))
+                if n.emit_every == 0:
+                    last_vals[name] = v
+                else:
+                    out_streams[name].append(v)
+            else:
+                if (aq is not None and not ready(aq)) or \
+                        (bq is not None and not ready(bq)) or \
+                        (cq is not None and not ready(cq)):
+                    continue
+                a = aq.popleft() if aq is not None else None
+                b = bq.popleft() if bq is not None else None
+                c = cq.popleft() if cq is not None else None
+                if n.kind == D.ALU:
+                    if n.is_reduction():
+                        x = np.int64(n.value) if n.value is not None else a
+                        accs[name] = np.int64(alu_eval(n.op, accs[name], x))
+                        acc_count[name] += 1
+                        k = n.emit_every
+                        if (k == 1) or (k > 1 and acc_count[name] % k == 0) \
+                                or (k == 0 and acc_count[name] == length):
+                            emit(name, "out", accs[name])
+                            if k > 1:
+                                accs[name] = np.int64(n.acc_init)
+                    else:
+                        bb = b if b is not None else np.int64(n.value)
+                        emit(name, "out", np.int64(alu_eval(n.op, a, bb)))
+                elif n.kind == D.CMP:
+                    av = a
+                    if b is not None:
+                        av = np.int64(alu_eval(AluOp.SUB, a, b))
+                    elif n.value is not None:
+                        av = np.int64(alu_eval(AluOp.SUB, a,
+                                               np.int64(n.value)))
+                    emit(name, "out", np.int64(cmp_eval(n.op, av)))
+                elif n.kind == D.MUX:
+                    bb = b if b is not None else np.int64(n.value)
+                    emit(name, "out", a if c != 0 else bb)
+                elif n.kind == D.BRANCH:
+                    emit(name, "t" if c != 0 else "f", a)
+                else:   # pragma: no cover - validate() rejects other kinds
+                    raise ValueError(f"bad node kind {n.kind}")
+            progress = True
+            firings += 1
+            if firings > max_firings:
+                raise RuntimeError(
+                    f"{g.name}: token execution exceeded {max_firings} "
+                    f"firings; a data-dependent loop predicate never "
+                    f"released its token (non-terminating loop)")
+
+    outputs = {}
+    for o in g.outputs:
+        if g.nodes[o].emit_every == 0:
+            outputs[o] = np.array(
+                [last_vals[o]] if last_vals[o] is not None else [], dtype=I32)
         else:
             outputs[o] = np.array(out_streams[o], dtype=I32)
     return outputs

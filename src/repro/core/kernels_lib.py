@@ -6,6 +6,11 @@ One-shot kernels:
   * ``dither``    — 1-D threshold dither with error feedback (loop-carried)
   * ``find2min``  — two running minima + indices (irregular loop, 4 scalars out)
 
+Irregular-loop kernels (data-dependent trip counts, gated Branch/Merge):
+  * ``div_loop``  — hand-built divmod-by-repeated-subtraction (10 FUs)
+  * ``TRACED_LOOPS`` — plain-Python ``lax.while_loop``/``lax.scan`` kernels
+    (div_iter / isqrt / clip_scan / gemv_early) lowered by ``repro.frontend``
+
 Multi-shot building blocks:
   * ``mac3``      — three dot-products at a time (Fig. 7c: 4 input vectors)
   * ``conv2d_row``— one 3-wide filter-row partial accumulation (3 shots total)
@@ -158,6 +163,115 @@ def find2min_brmg() -> DFG:
     return b.done()
 
 
+def div_loop(divisor: int = 7) -> DFG:
+    """Iterative division by repeated subtraction — the paper's "irregular
+    loop" pattern on the gated Branch/Merge schema (Fig. 4 elastic feedback).
+
+    Per element x (x >= 0): circulate (q, r) with r -= divisor, q += 1 while
+    r >= divisor; the exit legs release (q, r) = divmod(x, divisor). The
+    *gate* joins each fresh element with a demand token minted by the
+    previous element's exit (initial demand token present), so exactly one
+    element is in flight and OMN order is preserved. Recirculation back
+    edges carry no initial token (``init=None``); the simulator terminates
+    by token exhaustion since trip counts are data-dependent.
+    """
+    b = DFG.build("div_loop")
+    x = b.inp("x")
+    gate = b.alu("gate", AluOp.ADD, x, None)          # b <- demand back edge
+    q0 = b.alu("q0", AluOp.MUL, gate, const_b=0)      # paced constant q=0
+    mr = b.merge("mr", None, gate)                    # a <- recirculated r
+    mq = b.merge("mq", None, q0)                      # a <- recirculated q
+    c = b.cmp("c", CmpOp.GTZ, mr, const_b=divisor - 1)   # r >= divisor
+    brr = b.branch("brr", mr, c)
+    brq = b.branch("brq", mq, c)
+    rn = b.alu("rn", AluOp.SUB, brr, const_b=divisor, a_port="t")
+    qn = b.alu("qn", AluOp.ADD, brq, const_b=1, a_port="t")
+    b.back_edge(rn, mr, "a", init=None)
+    b.back_edge(qn, mq, "a", init=None)
+    dem = b.alu("dem", AluOp.MUL, brq, const_b=0, a_port="f")
+    b.back_edge(dem, gate, "b", init=0)
+    b.out("out_q", brq, src_port="f")
+    b.out("out_r", brr, src_port="f")
+    return b.done()
+
+
+# ---------------------------------------------------------------------------
+# traced irregular-loop kernels (plain Python/JAX, lowered by the frontend)
+# ---------------------------------------------------------------------------
+
+def loop_div_fn(divisor: int = 7):
+    """q, r = divmod(x, divisor) for x >= 0 via ``lax.while_loop`` repeated
+    subtraction — a data-dependent trip count per element."""
+    from jax import lax
+
+    def div_iter(x):
+        def cond(c):
+            q, r = c
+            return r > divisor - 1
+
+        def body(c):
+            q, r = c
+            return q + 1, r - divisor
+
+        return lax.while_loop(cond, body, (0, x))
+    return div_iter
+
+
+def loop_isqrt_fn():
+    """Integer square root: smallest s with (s+1)^2 > x (x >= 0) — the
+    stream element rides the loop as a cond-closure invariant."""
+    from jax import lax
+
+    def isqrt(x):
+        def cond(s):
+            return (s + 1) * (s + 1) <= x
+        return lax.while_loop(cond, lambda s: s + 1, 0)
+    return isqrt
+
+
+def clip_scan_fn(lo: int = -128, hi: int = 127):
+    """Data-dependent clipping integrator: acc' = clip(acc + x, lo, hi) —
+    a ``lax.scan`` recurrence (loop-carried back edge, like dither)."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    def clip_scan(x):
+        def f(acc, xi):
+            a2 = jnp.clip(acc + xi, lo, hi)
+            return a2, a2
+        _, ys = lax.scan(f, 0, x)
+        return ys
+    return clip_scan
+
+
+def gemv_early_fn(threshold: int = 1 << 20):
+    """Dot-product row with an early-exit threshold: accumulation freezes
+    once the partial sum exceeds ``threshold`` (branchy GEMV row); the final
+    carry drains through a last-value OMN."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    def gemv_early(a, b):
+        def f(c, ab):
+            acc, done = c
+            ai, bi = ab
+            acc2 = jnp.where(done != 0, acc, acc + ai * bi)
+            done2 = done | (acc2 > threshold).astype(jnp.int32)
+            return (acc2, done2), None
+        (acc, _), _ = lax.scan(f, (0, 0), (a, b))
+        return acc
+    return gemv_early
+
+
+# name -> (python-function factory, number of input streams)
+TRACED_LOOPS = {
+    "div_iter": (loop_div_fn, 1),
+    "isqrt": (loop_isqrt_fn, 1),
+    "clip_scan": (clip_scan_fn, 1),
+    "gemv_early": (gemv_early_fn, 2),
+}
+
+
 def mac1(vec_len: int) -> DFG:
     """Single dot-product lane: acc += a*b, emit after ``vec_len`` tokens."""
     b = DFG.build("mac1")
@@ -308,4 +422,9 @@ ONE_SHOT = {
     "relu": relu,
     "dither": dither,
     "find2min": find2min,
+}
+
+# hand-built data-dependent loop kernels (gated Branch/Merge recirculation)
+LOOP_KERNELS = {
+    "div_loop": div_loop,
 }

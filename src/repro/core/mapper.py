@@ -98,7 +98,10 @@ def auto_unroll(g: D.DFG, fabric: Optional[Fabric] = None,
     fabric = fabric or Fabric()
     best: Optional[Tuple[Mapping, int]] = None
     for factor in range(1, max_factor + 1):
-        gu = (unroll_chained(g, factor) if chained and g.back_edges()
+        # gated data-dependent loops are self-contained per element: they
+        # replicate as independent lanes, never with cross-lane chaining
+        gu = (unroll_chained(g, factor)
+              if chained and g.back_edges() and not g.has_recirculation()
               else unroll(g, factor))
         if len(gu.inputs) > fabric.n_imns or len(gu.outputs) > fabric.n_omns:
             break

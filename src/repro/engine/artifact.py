@@ -34,7 +34,9 @@ from repro.core.multishot import rearm_cycles
 
 # Bump whenever the artifact layout or any compile-pipeline semantics
 # change; the version is hashed into cache keys, so old entries miss.
-SCHEMA_VERSION = 1
+# v2: Edge.init became Optional (None = recirculation edge of a
+#     data-dependent loop) and the frontend lowers while/fori/scan.
+SCHEMA_VERSION = 2
 
 Geometry = Tuple[int, int, int, int]          # (rows, cols, n_imns, n_omns)
 

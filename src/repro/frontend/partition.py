@@ -149,7 +149,15 @@ def _clusters(g: D.DFG, order: Sequence[str]) -> List[List[str]]:
 
 
 def _rates(g: D.DFG) -> Dict[Sig, Fraction]:
-    """Token rate of every signal relative to the input streams."""
+    """Token rate of every signal relative to the input streams.
+
+    Nodes inside a data-dependent loop body (Branch/Merge recirculation)
+    follow loop semantics instead of the cond semantics: the loop-exit
+    BRANCH releases exactly one token per admitted element (full rate) and
+    the entry MERGE passes the admitted element's rate through — so a plan
+    may legally cut right after a loop, while the loop body itself stays
+    atomic via the back-edge clustering."""
+    loop_body = g.recirculation_nodes()
     rate: Dict[Sig, Fraction] = {}
     for n in g.topo_order():
         node = g.nodes[n]
@@ -163,14 +171,19 @@ def _rates(g: D.DFG) -> Dict[Sig, Fraction]:
             k = node.emit_every
             base = base / k if k > 1 else (Fraction(0) if k == 0 else base)
             # emit_every == length traces to Fraction(1/length) via k > 1
-        if node.kind == D.BRANCH:
+        if node.kind == D.BRANCH and n not in loop_body:
             # branch legs carry data-dependent sub-rate token streams (only
             # the taken side fires); a non-unit marker makes them — and
             # everything downstream until the complementary MERGE — illegal
             # cut points
             for p in ("t", "f"):
                 rate[(n, p)] = base / 2
-        elif node.kind == D.MERGE:
+        elif node.kind == D.BRANCH:
+            # loop branch: per element, the taken leg fires a data-dependent
+            # number of times but the exit leg fires exactly once
+            for p in ("t", "f"):
+                rate[(n, p)] = base
+        elif node.kind == D.MERGE and n not in loop_body:
             # the frontend only emits MERGEs joining complementary branch
             # legs, which restores the pre-branch rate
             rate[(n, "out")] = base * 2

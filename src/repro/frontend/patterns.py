@@ -1,7 +1,8 @@
 """Control/reduction idiom recognition for the frontend (paper Sec. III-C).
 
-The fabric supports exactly two control patterns beyond elementwise data
-flow, and this module lowers the jaxpr idioms that express them:
+The fabric supports the control patterns of the elastic Branch/Merge
+microarchitecture beyond elementwise data flow, and this module lowers the
+jaxpr idioms that express them:
 
   * **reductions** — ``jnp.sum`` / ``jnp.prod`` / bitwise reductions over a
     whole stream, and 1-D ``jnp.dot``: lower to the ALU's immediate feedback
@@ -13,7 +14,22 @@ flow, and this module lowers the jaxpr idioms that express them:
     taken side fires, unlike a mux that evaluates both), and each result is
     re-joined by a MERGE of the complementary legs. ``lax.cond`` needs a
     scalar predicate, so it is only reachable in element-mode traces (the
-    tracer falls back automatically).
+    tracer falls back automatically);
+  * **``lax.while_loop`` (irregular, data-dependent loops)** — lowers to the
+    gated loop schema of the paper's Fig. 4 elastic feedback: a demand-token
+    *gate* admits one stream element into the loop at a time (preserving OMN
+    output order), an entry MERGE joins the admitted value with the
+    recirculating one, the loop predicate is evaluated on the merged carry
+    and steers one BRANCH per loop variable — the taken leg recirculates
+    through the body over a *recirculation back edge* (``init=None``, no
+    initial token), the not-taken leg exits. The exit event mints the next
+    demand token. ``lax.fori_loop`` arrives here when its trip count is
+    data-dependent (JAX lowers it to ``while``);
+  * **``lax.scan`` over the stream** — the loop-carried recurrence pattern
+    (dither's error diffusion): carries become back edges with their initial
+    value as the register init, the body fires once per element.
+    ``lax.fori_loop`` with a *static* trip count arrives as a no-stream scan
+    and is unrolled in place.
 
 Handlers follow the tracer's calling convention:
 ``handler(lowerer, eqn, in_values) -> out_values``.
@@ -24,9 +40,14 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
+from repro.core import dfg as D
 from repro.core.isa import AluOp
-from repro.frontend.tracer import (ConstVal, FrontendError, Lowerer, Value,
-                                   Wire, _fold)
+from repro.frontend.tracer import (ConstVal, FinalWire, FrontendError,
+                                   Lowerer, Value, Wire, _fold)
+
+# static-trip loops (fori_loop / xs-less scan) are unrolled in place up to
+# this many iterations; beyond that the graph would not place anyway
+MAX_STATIC_UNROLL = 64
 
 # reduction primitive -> (ALU op, accumulator init)
 _REDUCE_OPS = {
@@ -126,8 +147,202 @@ def _h_cond(lw: Lowerer, eqn, ins: List[Value]) -> List[Value]:
     return outs
 
 
+# ---------------------------------------------------------------------------
+# irregular loops: lax.while_loop -> gated Branch/Merge recirculation
+# ---------------------------------------------------------------------------
+
+def _h_while(lw: Lowerer, eqn, ins: List[Value]) -> List[Value]:
+    """Lower ``lax.while_loop`` onto the elastic loop schema (see module
+    docstring). Loop variables are the cond/body closure operands (loop
+    invariants, recirculated unchanged) followed by the carry."""
+    p = eqn.params
+    cond_cj, body_cj = p["cond_jaxpr"], p["body_jaxpr"]
+    nc, nb = p["cond_nconsts"], p["body_nconsts"]
+    n_carry = len(ins) - nc - nb
+    entries = list(ins)
+
+    wire_idx = [i for i, v in enumerate(entries) if isinstance(v, Wire)]
+    if not wire_idx:
+        raise lw.unsupported(
+            eqn, "while loop consumes no stream operands; nothing paces "
+                 "elements into the loop")
+
+    # 1. demand gates: one per stream-derived loop input. A gate joins the
+    # fresh element with a demand token minted by the previous element's
+    # exit, so at most one element circulates at a time (output order).
+    gates: Dict[int, Wire] = {}
+    gate_nodes: List[str] = []
+    for i in wire_idx:
+        v = entries[i]
+        if isinstance(v, FinalWire) or lw._rate.get(v.node, 1) != 1:
+            raise lw.unsupported(
+                eqn, f"loop operand {i} is a reduction output (a single "
+                     f"emitted token); the loop gate needs one token per "
+                     f"stream element")
+        gname = lw.fresh("lgate")
+        lw.b.alu(gname, AluOp.ADD, v.node, None, a_port=v.port)
+        lw._rate[gname] = 1
+        gates[i] = Wire(gname)
+        gate_nodes.append(gname)
+    pace = gates[wire_idx[0]]
+
+    # Loop variables that circulate: stream-derived invariants (their token
+    # must be re-presented each iteration) and every carry. Compile-time
+    # constant invariants fold into PE constants inside cond/body instead.
+    looped = [i for i, v in enumerate(entries)
+              if isinstance(v, Wire) or i >= nc + nb]
+
+    # 2. constant carry inits become paced constants off the admitted element
+    entry_vals: Dict[int, Wire] = {}
+    for i in looped:
+        v = entries[i]
+        entry_vals[i] = gates[i] if i in gates \
+            else lw.paced_const(pace, v.value)
+
+    # 3. entry merges: recirculating value (port a, attached below via a
+    # recirculation back edge) has priority over the next fresh element
+    merges: Dict[int, Wire] = {}
+    for i in looped:
+        ev = entry_vals[i]
+        mname = lw.fresh("lmg")
+        lw.b.merge(mname, None, ev.node, b_port=ev.port)
+        lw._rate[mname] = 1
+        merges[i] = Wire(mname)
+
+    def var(i: int) -> Value:
+        return merges[i] if i in merges else entries[i]
+
+    # 4. the loop predicate fires once per iteration on the merged values
+    cond_ins = [var(i) for i in range(nc)] + \
+               [var(i) for i in range(nc + nb, len(entries))]
+    (pred,) = lw.lower_jaxpr(cond_cj.jaxpr, cond_cj.consts, cond_ins)
+    if isinstance(pred, ConstVal):
+        raise lw.unsupported(
+            eqn, f"loop predicate is the compile-time constant {pred.value}; "
+                 f"a data-dependent loop must read its carry or an input")
+
+    # 5. one BRANCH per circulating variable: taken leg iterates, the
+    # not-taken leg exits the loop
+    brs: Dict[int, str] = {}
+    for i in looped:
+        bname = lw.fresh("lbr")
+        lw.b.branch(bname, merges[i].node, pred.node,
+                    a_port=merges[i].port, ctrl_port=pred.port)
+        brs[i] = bname
+
+    def taken(i: int) -> Value:
+        return Wire(brs[i], "t") if i in brs else entries[i]
+
+    # 6. body on the taken legs (constant invariants pass straight through)
+    body_ins = [taken(i) for i in range(nc, nc + nb)] + \
+               [taken(i) for i in range(nc + nb, len(entries))]
+    new_carries = lw.lower_jaxpr(body_cj.jaxpr, body_cj.consts, body_ins)
+
+    # 7. recirculation back edges (no initial token): invariants straight
+    # from their taken leg, carries from their body result
+    t_pace = Wire(brs[looped[0]], "t")
+    for i in looped:
+        if i < nc + nb:
+            lw.b.back_edge(brs[i], merges[i].node, "a", init=None,
+                           src_port="t")
+    for k, nv in enumerate(new_carries):
+        if isinstance(nv, ConstVal):
+            nv = lw.paced_const(t_pace, nv.value)
+        lw.b.back_edge(nv.node, merges[nc + nb + k].node, "a", init=None,
+                       src_port=nv.port)
+
+    # 8. the exit event mints the next demand token (value 0, initial token
+    # present so the first element is admitted)
+    dem = lw.emit_alu(AluOp.MUL, Wire(brs[nc + nb], "f"), const_b=0,
+                      stem="ldem")
+    for gname in gate_nodes:
+        lw.b.back_edge(dem.node, gname, "b", init=0)
+
+    # 9. the while's results are the carries' exit legs
+    return [Wire(brs[nc + nb + k], "f") for k in range(n_carry)]
+
+
+# ---------------------------------------------------------------------------
+# lax.scan: stream recurrences (back-edge carries) and static unrolling
+# ---------------------------------------------------------------------------
+
+def _h_scan(lw: Lowerer, eqn, ins: List[Value]) -> List[Value]:
+    p = eqn.params
+    closed = p["jaxpr"]
+    ncon, ncar = p["num_consts"], p["num_carry"]
+    length = int(p["length"])
+    consts, inits, xs = ins[:ncon], ins[ncon:ncon + ncar], ins[ncon + ncar:]
+    n_ys = len(eqn.outvars) - ncar
+    if p.get("reverse"):
+        raise lw.unsupported(
+            eqn, "reverse scan; IMN streams only ascend (negative strides "
+                 "would need a reversed stream copy)")
+
+    if not xs:
+        # fori_loop with a static trip count: unroll the body in place
+        if length > MAX_STATIC_UNROLL:
+            raise lw.unsupported(
+                eqn, f"static {length}-iteration loop exceeds the "
+                     f"{MAX_STATIC_UNROLL}x unroll budget")
+        if n_ys:
+            raise lw.unsupported(
+                eqn, "unrolled static loop cannot emit per-iteration "
+                     "outputs (no stream paces them)")
+        vals: List[Value] = list(inits)
+        for _ in range(length):
+            vals = lw.lower_jaxpr(closed.jaxpr, closed.consts,
+                                  list(consts) + vals)
+        return vals
+
+    # whole-stream recurrence: carries become loop-carried back edges
+    if length != lw.length:
+        raise lw.unsupported(
+            eqn, f"scan over {length} elements inside a {lw.length}-element "
+                 f"stream trace; only whole-stream scans map to back edges")
+    for k, c in enumerate(consts):
+        if not isinstance(c, ConstVal):
+            raise lw.unsupported(
+                eqn, f"loop-invariant scan operand {k} is a runtime value; "
+                     f"only compile-time scalars fold into PE constants")
+    for k, iv in enumerate(inits):
+        if not isinstance(iv, ConstVal):
+            raise lw.unsupported(
+                eqn, f"carry {k} initial value is a runtime value; a back "
+                     f"edge's register init must be a compile-time scalar")
+
+    sents = [lw.fresh("@carry") for _ in range(ncar)]
+    sent_set = set(sents)
+    body_args: List[Value] = list(consts) + [Wire(s) for s in sents] + \
+        list(xs)
+    outs = lw.lower_jaxpr(closed.jaxpr, closed.consts, body_args)
+    new_carries, ys = outs[:ncar], outs[ncar:]
+
+    # a y that is the raw previous carry needs a pass-through node to own
+    # the back edge (dither's error tap)
+    ys = [lw.emit_alu(AluOp.ADD, y, const_b=0, stem="prev")
+          if isinstance(y, Wire) and y.node in sent_set else y
+          for y in ys]
+
+    finals: List[Value] = []
+    for k, nv in enumerate(new_carries):
+        if isinstance(nv, ConstVal) or (isinstance(nv, Wire)
+                                        and nv.node in sent_set):
+            raise lw.unsupported(
+                eqn, f"scan carry {k} is a constant or pass-through; fold "
+                     f"the invariant out of the loop")
+        init_val = _fold(inits[k].value)
+        lw.b.edges = [
+            D.Edge(nv.node, nv.port, e.dst, e.dst_port, True, init_val)
+            if e.src == sents[k] else e
+            for e in lw.b.edges]
+        finals.append(FinalWire(nv.node, nv.port))
+    return finals + ys
+
+
 PATTERN_HANDLERS: Dict[str, Callable] = {
     **{prim: _h_reduce for prim in _REDUCE_OPS},
     "dot_general": _h_dot_general,
     "cond": _h_cond,
+    "while": _h_while,
+    "scan": _h_scan,
 }

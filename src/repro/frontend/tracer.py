@@ -17,6 +17,10 @@ abstract values and lowers the resulting jaxpr equation-by-equation onto the
     (see patterns.py)
   * two-way ``lax.cond``                        -> BRANCH/MERGE pairs
     (see patterns.py)
+  * ``lax.while_loop`` / ``lax.fori_loop``      -> gated Branch/Merge loops
+    with recirculation back edges (see patterns.py)
+  * ``lax.scan`` over the stream               -> loop-carried back-edge
+    recurrences (see patterns.py)
 
 Anything else raises :class:`UnsupportedPrimitiveError` naming the offending
 equation. Constant placement honours the hardware: a PE holds one constant
@@ -62,6 +66,13 @@ class Wire:
 
 
 @dataclasses.dataclass(frozen=True)
+class FinalWire(Wire):
+    """A scan's final carry: the producer emits every element but only the
+    *last* token is the value (OMN last-value mode). Valid only as a kernel
+    output; joining it with a stream elementwise is rejected at trace time."""
+
+
+@dataclasses.dataclass(frozen=True)
 class ConstVal:
     """A compile-time scalar constant (folds into a PE constant)."""
 
@@ -75,7 +86,9 @@ _COMMUTATIVE = {AluOp.ADD, AluOp.MUL, AluOp.AND, AluOp.OR, AluOp.XOR}
 _SUPPORTED_NOTE = (
     "the STRELA fabric lowers int32 add/sub/mul/shift/bitwise ALU ops, "
     "eqz/gtz comparisons, select/where/max/min muxes, full-stream "
-    "sum/prod/bitwise reductions, 1-D dot products, and two-way lax.cond")
+    "sum/prod/bitwise reductions, 1-D dot products, two-way lax.cond, "
+    "data-dependent lax.while_loop / lax.fori_loop, and whole-stream "
+    "lax.scan recurrences")
 
 
 def _fold(x) -> int:
@@ -96,6 +109,13 @@ class Lowerer:
         self._rate: Dict[str, int] = {}
 
     def _join_rate(self, wires: Sequence[Optional[Wire]]) -> int:
+        for w in wires:
+            if isinstance(w, FinalWire):
+                raise FrontendError(
+                    f"{self.name}: a scan's final carry is a single "
+                    f"end-of-stream value; it can only be returned as a "
+                    f"kernel output, not consumed elementwise (re-using it "
+                    f"needs a multi-shot plan with a re-armed PE constant)")
         rates = {self._rate.get(w.node, 1) for w in wires if w is not None}
         if len(rates) > 1:
             raise FrontendError(
@@ -297,6 +317,9 @@ class Lowerer:
                     f"{self.name}: output {i} is the compile-time constant "
                     f"{val.value}; a kernel output must depend on a stream")
             self.b.out(f"out{i}", val.node, src_port=val.port)
+            if isinstance(val, FinalWire):
+                # scan final carry: OMN stores the last value (stride-0)
+                self.b.nodes[f"out{i}"].emit_every = 0
         self._prune(input_names)
         return self.b.done()
 

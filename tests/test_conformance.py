@@ -1,0 +1,424 @@
+"""Cross-backend differential conformance suite (ISSUE 3 satellite).
+
+A seeded random-DFG generator composes gadgets from the fabric's full
+vocabulary — elementwise ALU/CMP/MUX chains, Branch/Merge conditionals,
+loop-carried state cells (dither-style back edges), last-value
+accumulators, and gated while-loops with data-dependent trip counts —
+under the 4x4 fabric's budgets (<= 4 IMN / <= 4 OMN / bounded PE count).
+
+Every generated graph carries its own *independent* reference semantics: a
+pure-Python evaluator built gadget-by-gadget during generation (python
+ints, explicit 32-bit wrapping) — deliberately sharing no code with
+``core.executor``. Each case then asserts bit-exact agreement between
+
+  1. the pure-Python reference,
+  2. the functional executor (vectorized / loop / token paths), and
+  3. the cycle-accurate elastic simulator on the placed-and-routed netlist.
+
+The deterministic corpus below runs everywhere (>= 200 sim-verified cases,
+the ISSUE acceptance bar); the hypothesis properties widen the sweep when
+hypothesis is installed (CI runs them under the fixed ``ci`` profile).
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("ci", deadline=None, derandomize=True,
+                              max_examples=60)
+    settings.register_profile("dev", deadline=None, max_examples=25)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ModuleNotFoundError:
+    from hypothesis_stub import given, settings, st
+
+from repro.core import dfg as D
+from repro.core.elastic_sim import simulate
+from repro.core.executor import execute
+from repro.core.isa import AluOp, CmpOp
+from repro.core.mapper import MappingError, map_dfg
+
+# corpus sizing: the ISSUE acceptance requires >= 200 sim-verified cases
+N_CASES = 230
+MIN_SIM_VERIFIED = 200
+MAX_FUNC_NODES = 10          # leaves route-through headroom on 16 PEs
+
+
+def _wrap(v: int) -> int:
+    """Two's-complement 32-bit wrap on python ints (independent of numpy)."""
+    return ((int(v) & 0xFFFFFFFF) ^ 0x80000000) - 0x80000000
+
+
+def _alu_ref(op: AluOp, a: int, b: int) -> int:
+    if op == AluOp.ADD:
+        return _wrap(a + b)
+    if op == AluOp.SUB:
+        return _wrap(a - b)
+    if op == AluOp.MUL:
+        return _wrap(a * b)
+    if op == AluOp.AND:
+        return _wrap(a & b)
+    if op == AluOp.OR:
+        return _wrap(a | b)
+    if op == AluOp.XOR:
+        return _wrap(a ^ b)
+    if op == AluOp.SHL:
+        return _wrap(a << (b & 31))
+    if op == AluOp.SHR:
+        return _wrap(a >> (b & 31))
+    raise ValueError(op)
+
+
+_EW_OPS = (AluOp.ADD, AluOp.SUB, AluOp.MUL, AluOp.AND, AluOp.OR, AluOp.XOR,
+           AluOp.SHL, AluOp.SHR)
+_ACC_OPS = ((AluOp.ADD, 0), (AluOp.XOR, 0), (AluOp.OR, 0))
+
+
+class _Gen:
+    """One random conformance case: a DFG plus per-wire reference values.
+    Wires are ``(node, port)`` tuples; ``self.vals`` maps each full-rate
+    wire to its pure-Python per-element reference values.
+
+    The generator is congestion- and skew-aware, like a real kernel author:
+    a wire feeds at most two consumers (Fork-Sender pressure), and joined
+    operands must sit within one pipeline stage of each other — 2-slot
+    elastic buffers deadlock when reconvergent-path skew exceeds their
+    slack, a liveness property of the microarchitecture itself."""
+
+    def __init__(self, seed: int, length: int):
+        self.rng = np.random.default_rng(seed)
+        self.length = length
+        self.b = D.DFG.build(f"conf{seed}")
+        self.vals = {}               # (node, port) -> [python int] * length
+        self.depth = {}              # (node, port) -> pipeline depth
+        self.uses = {}               # (node, port) -> consumer count
+        self.sensitive = set()       # cond-merge outputs: arrival-ordered
+        self.while_exits = []
+        self.n_func = 0
+        self.k = 0
+
+    def name(self, stem: str) -> str:
+        self.k += 1
+        return f"{stem}{self.k}"
+
+    def const(self) -> int:
+        return int(self.rng.integers(-9, 10))
+
+    def reg(self, wire, vals, depth: int) -> None:
+        self.vals[wire] = vals
+        self.depth[wire] = depth
+        self.uses.setdefault(wire, 0)
+
+    def pick_wire(self, near=None, tol: int = 1, ordered: bool = False):
+        """A lightly-used wire, optionally within ``tol`` pipeline stages of
+        depth ``near`` (None candidates fall back progressively).
+
+        ``ordered=True`` excludes cond-merge outputs: an any-valid MERGE
+        commits its legs in *arrival* order, which backpressure from a
+        sub-rate consumer (a loop or state cell) can permute — the paper's
+        kernels only ever feed merges into full-rate consumers, and the
+        generator mirrors that contract."""
+        pool = [w for w in sorted(self.vals)
+                if not (ordered and w in self.sensitive)]
+        for maxuse, t in ((2, tol), (2, 99), (99, 99)):
+            cand = [w for w in pool
+                    if self.uses[w] < maxuse
+                    and (near is None or abs(self.depth[w] - near) <= t)]
+            if cand:
+                w = cand[int(self.rng.integers(0, len(cand)))]
+                self.uses[w] += 1
+                return w
+        raise AssertionError("no wires")
+
+    # -- gadgets (each records exact reference semantics) -------------------
+    def g_alu(self) -> None:
+        a = self.pick_wire()
+        op = _EW_OPS[int(self.rng.integers(0, len(_EW_OPS)))]
+        n = self.name("alu")
+        da = self.depth[a]
+        if self.rng.random() < 0.5:
+            c = abs(self.const()) if op in (AluOp.SHL, AluOp.SHR) \
+                else self.const()
+            self.b.alu(n, op, a[0], const_b=c, a_port=a[1])
+            self.reg((n, "out"), [_alu_ref(op, v, c) for v in self.vals[a]],
+                     da + 1)
+        else:
+            b2 = self.pick_wire(near=da)
+            self.b.alu(n, op, a[0], b2[0], a_port=a[1], b_port=b2[1])
+            self.reg((n, "out"),
+                     [_alu_ref(op, v, w) for v, w in
+                      zip(self.vals[a], self.vals[b2])],
+                     max(da, self.depth[b2]) + 1)
+        self.n_func += 1
+
+    def _cmp(self, a):
+        op = CmpOp.GTZ if self.rng.random() < 0.8 else CmpOp.EQZ
+        c = self.const()
+        n = self.name("cmp")
+        self.b.cmp(n, op, a[0], const_b=c, a_port=a[1])
+        diff = [_wrap(v - c) for v in self.vals[a]]
+        self.reg((n, "out"), [int(d > 0) if op == CmpOp.GTZ else int(d == 0)
+                              for d in diff], self.depth[a] + 1)
+        self.n_func += 1
+        return (n, "out")
+
+    def g_mux(self) -> None:
+        base = self.pick_wire()
+        ctrl = self._cmp(base)
+        dc = self.depth[ctrl]
+        a, b2 = self.pick_wire(near=dc), self.pick_wire(near=dc)
+        n = self.name("mux")
+        self.b.mux(n, a[0], b2[0], ctrl[0], a_port=a[1], b_port=b2[1],
+                   ctrl_port=ctrl[1])
+        self.reg((n, "out"),
+                 [va if c else vb for va, vb, c in
+                  zip(self.vals[a], self.vals[b2], self.vals[ctrl])],
+                 max(self.depth[a], self.depth[b2], dc) + 1)
+        self.n_func += 1
+
+    def g_branch_merge(self) -> None:
+        """cond gadget: BRANCH steers a value onto complementary legs, each
+        leg applies a different constant op, a MERGE rejoins them."""
+        base = self.pick_wire()
+        ctrl = self._cmp(base)
+        a = self.pick_wire(near=self.depth[ctrl])
+        br = self.name("br")
+        self.b.branch(br, a[0], ctrl[0], a_port=a[1], ctrl_port=ctrl[1])
+        opt, ct = _EW_OPS[int(self.rng.integers(0, 6))], self.const()
+        opf, cf = _EW_OPS[int(self.rng.integers(0, 6))], self.const()
+        tn, fn = self.name("lt"), self.name("lf")
+        self.b.alu(tn, opt, br, const_b=ct, a_port="t")
+        self.b.alu(fn, opf, br, const_b=cf, a_port="f")
+        mg = self.name("mg")
+        self.b.merge(mg, tn, fn)
+        self.reg((mg, "out"),
+                 [_alu_ref(opt, v, ct) if c else _alu_ref(opf, v, cf)
+                  for v, c in zip(self.vals[a], self.vals[ctrl])],
+                 max(self.depth[a], self.depth[ctrl]) + 3)
+        self.sensitive.add((mg, "out"))
+        self.n_func += 4
+
+    def g_state(self) -> None:
+        """dither-style loop-carried cell: s1 = op(x, s2_prev); s2 =
+        op2(s1, const); the s2 -> s1 edge is a back edge with an init."""
+        x = self.pick_wire(ordered=True)     # sub-rate consumer (II=2 loop)
+        op = (AluOp.ADD, AluOp.SUB, AluOp.XOR)[int(self.rng.integers(0, 3))]
+        op2, c2 = (AluOp.AND, AluOp.SHR)[int(self.rng.integers(0, 2))], \
+            abs(self.const()) % 6 + 1
+        init = self.const()
+        s1, s2 = self.name("st"), self.name("st")
+        self.b.alu(s1, op, x[0], None, a_port=x[1])
+        self.b.alu(s2, op2, s1, const_b=c2)
+        self.b.back_edge(s2, s1, "b", init=init)
+        carry, v1s, v2s = init, [], []
+        for v in self.vals[x]:
+            v1 = _alu_ref(op, v, carry)
+            carry = _alu_ref(op2, v1, c2)
+            v1s.append(v1)
+            v2s.append(carry)
+        self.reg((s1, "out"), v1s, self.depth[x] + 1)
+        self.reg((s2, "out"), v2s, self.depth[x] + 2)
+        self.n_func += 2
+
+    def g_while(self) -> None:
+        """gated data-dependent loop: (q, r) = divmod(x & 31, d) on the
+        recirculating Branch/Merge schema (cf. kernels_lib.div_loop)."""
+        x = self.pick_wire(ordered=True)     # sub-rate consumer (gated loop)
+        d = int(self.rng.integers(3, 10))
+        msk = self.name("msk")
+        self.b.alu(msk, AluOp.AND, x[0], const_b=31, a_port=x[1])
+        gate = self.name("lg")
+        self.b.alu(gate, AluOp.ADD, msk, None)
+        q0 = self.name("lq0")
+        self.b.alu(q0, AluOp.MUL, gate, const_b=0)
+        mr, mq = self.name("lmr"), self.name("lmq")
+        self.b.merge(mr, None, gate)
+        self.b.merge(mq, None, q0)
+        c = self.name("lc")
+        self.b.cmp(c, CmpOp.GTZ, mr, const_b=d - 1)
+        brr, brq = self.name("lbr"), self.name("lbr")
+        self.b.branch(brr, mr, c)
+        self.b.branch(brq, mq, c)
+        rn, qn = self.name("lrn"), self.name("lqn")
+        self.b.alu(rn, AluOp.SUB, brr, const_b=d, a_port="t")
+        self.b.alu(qn, AluOp.ADD, brq, const_b=1, a_port="t")
+        self.b.back_edge(rn, mr, "a", init=None)
+        self.b.back_edge(qn, mq, "a", init=None)
+        dem = self.name("ldem")
+        self.b.alu(dem, AluOp.MUL, brq, const_b=0, a_port="f")
+        self.b.back_edge(dem, gate, "b", init=0)
+        self.n_func += 10
+        # exit legs are full-rate wires usable downstream
+        dx = self.depth[x]
+        self.reg((brq, "f"), [(v & 31) // d for v in self.vals[x]], dx + 4)
+        self.reg((brr, "f"), [(v & 31) % d for v in self.vals[x]], dx + 4)
+        self.while_exits += [(brq, "f"), (brr, "f")]
+
+    def build(self):
+        rng = self.rng
+        n_in = int(rng.integers(1, 4))
+        big_range = rng.random() < 0.25            # stress 32-bit wrapping
+        lo, hi = ((-2**31, 2**31) if big_range else (-100, 100))
+        inputs = {}
+        for i in range(n_in):
+            nm = f"in{i}"
+            self.b.inp(nm)
+            arr = rng.integers(lo, hi, self.length, dtype=np.int64)
+            inputs[nm] = arr.astype(np.int32)
+            self.reg((nm, "out"), [int(v) for v in inputs[nm]], 0)
+
+        gadgets = [self.g_alu, self.g_alu, self.g_mux, self.g_branch_merge,
+                   self.g_state]
+        want_while = rng.random() < 0.35
+        if want_while:
+            self.g_while()
+        while self.n_func < MAX_FUNC_NODES - 1:
+            gadget = gadgets[int(rng.integers(0, len(gadgets)))]
+            cost = {self.g_alu: 1, self.g_mux: 2, self.g_branch_merge: 5,
+                    self.g_state: 2}[gadget]
+            if self.n_func + cost > MAX_FUNC_NODES:
+                break
+            gadget()
+
+        # a last-value accumulator on some wire (feeds only its OUTPUT)
+        acc_out = None
+        if rng.random() < 0.4:
+            src = self.pick_wire()
+            op, init = _ACC_OPS[int(rng.integers(0, len(_ACC_OPS)))]
+            an = self.name("acc")
+            self.b.alu(an, op, src, acc_init=init, emit_every=0)
+            ref = init
+            for v in self.vals[src]:
+                ref = _alu_ref(op, ref, v)
+            acc_out = (an, [ref])
+
+        # outputs: while exits first (guarantees recirculation coverage),
+        # then the most recently created full-rate wires, capped at 4 OMNs
+        ref_outputs = {}
+        chosen = list(self.while_exits)
+        chosen += [w for w in sorted(self.vals)
+                   if w not in self.while_exits
+                   and self.b.nodes[w[0]].kind != D.INPUT][-3:]
+        for w in chosen[:4 - bool(acc_out)]:
+            o = f"out{len(ref_outputs)}"
+            self.b.out(o, w[0], src_port=w[1])
+            ref_outputs[o] = self.vals[w]
+        if acc_out is not None:
+            o = f"out{len(ref_outputs)}"
+            self.b.out(o, acc_out[0])
+            ref_outputs[o] = acc_out[1]
+
+        # every IMN stream must reach an output: mop up unused inputs
+        g = None
+        try:
+            g = self.b.done()
+        except ValueError:
+            return None, None, None
+        live = _live_inputs(g)
+        if set(inputs) - live:
+            return None, None, None
+        return g, inputs, ref_outputs
+
+
+def _live_inputs(g: D.DFG) -> set:
+    rev = {}
+    for e in g.edges:
+        rev.setdefault(e.dst, []).append(e.src)
+    seen, stack = set(g.outputs), list(g.outputs)
+    while stack:
+        for p in rev.get(stack.pop(), ()):
+            if p not in seen:
+                seen.add(p)
+                stack.append(p)
+    return {n for n in g.inputs if n in seen}
+
+
+def _mk_case(seed: int, length: int):
+    """Generate one case; retries nearby seeds when a draw wires an input
+    to nothing (the generator is total apart from that)."""
+    for s in range(seed, seed + 50):
+        gen = _Gen(s * 7919 + 13, length)
+        g, inputs, refs = gen.build()
+        if g is not None:
+            return g, inputs, refs
+    raise AssertionError(f"no viable case near seed {seed}")
+
+
+def _assert_case(seed: int, length: int, with_sim: bool) -> bool:
+    """Run one case across the backends; returns True if sim-verified."""
+    g, inputs, refs = _mk_case(seed, length)
+    outs = execute(g, inputs)
+    for o, ref in refs.items():
+        got = outs[o].tolist()
+        assert got == ref, (
+            f"seed {seed}: executor vs reference mismatch on {o}: "
+            f"{got[:8]} != {ref[:8]} (graph {g.name})")
+    if not with_sim:
+        return False
+    try:
+        m = map_dfg(g, restarts=60, seed=1)
+    except MappingError:
+        return False
+    try:
+        sim = simulate(m, inputs)
+    except RuntimeError as e:
+        # 2-slot elastic buffers genuinely deadlock on reconvergent paths
+        # whose latency skew exceeds the buffering slack (a liveness limit
+        # of the microarchitecture, not a semantics bug) — count these like
+        # routing failures, never as conformance passes
+        if "deadlock" in str(e):
+            return False
+        raise
+    for o, ref in refs.items():
+        got = sim.outputs[o].tolist()
+        assert got == ref, (
+            f"seed {seed}: elastic sim vs reference mismatch on {o}: "
+            f"{got[:8]} != {ref[:8]} (graph {g.name})")
+    return True
+
+
+# ---------------------------------------------------------------------------
+# deterministic corpus (always runs; the ISSUE acceptance bar)
+# ---------------------------------------------------------------------------
+
+def test_conformance_corpus():
+    sim_verified = 0
+    recirc_cases = 0
+    for seed in range(N_CASES):
+        length = (8, 16, 24)[seed % 3]
+        g, _, _ = _mk_case(seed, length)
+        if g.has_recirculation():
+            recirc_cases += 1
+        if _assert_case(seed, length, with_sim=True):
+            sim_verified += 1
+    assert sim_verified >= MIN_SIM_VERIFIED, (
+        f"only {sim_verified}/{N_CASES} cases were sim-verified "
+        f"(need >= {MIN_SIM_VERIFIED}; rest failed to place-and-route)")
+    assert recirc_cases >= 30, "corpus lost its data-dependent-loop coverage"
+
+
+def test_conformance_case_is_deterministic():
+    a = _mk_case(3, 16)[0].canonical_signature()
+    b = _mk_case(3, 16)[0].canonical_signature()
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (skip cleanly without hypothesis; CI profile fixed)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=N_CASES, max_value=10**6))
+@settings(deadline=None)
+def test_property_executor_matches_reference(seed):
+    """Any generated graph: functional executor == pure-Python reference."""
+    _assert_case(seed, 12, with_sim=False)
+
+
+@given(seed=st.integers(min_value=N_CASES, max_value=10**5),
+       length=st.sampled_from([4, 8, 20]))
+@settings(deadline=None, max_examples=20)
+def test_property_three_way_agreement(seed, length):
+    """Sim, executor, and the reference agree for every routable graph and
+    stream length."""
+    _assert_case(seed, length, with_sim=True)

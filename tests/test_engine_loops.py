@@ -1,0 +1,149 @@
+"""Engine cache round-trips for irregular-loop kernels (ISSUE 3 satellite).
+
+Loop artifacts (recirculation back edges, ``init=None``) must cache and
+serve like any other kernel: stable content digests across processes,
+byte-level artifact round-trips that still simulate, ``STRELA_CACHE=0``
+hermetic mode, and corrupted-entry recovery.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import kernels_lib as K
+from repro.core.elastic_sim import simulate
+from repro.core.fabric import Fabric
+from repro.engine import ArtifactCache, CompiledArtifact, Engine
+from repro.engine import cache as ecache
+from repro.engine import compiler as ecompiler
+
+rng = np.random.default_rng(0)
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+
+
+def _digest_script() -> str:
+    return (
+        "from repro.core import kernels_lib as K\n"
+        "from repro.engine import compiler as C\n"
+        "g = K.div_loop(7)\n"
+        "print(C.dfg_digest(g, (4, 4, 4, 4), 'sim'))\n"
+        "fn = K.loop_div_fn(7)\n"
+        "key, _, em = C.fn_cache_key(fn, 32, 'auto', 'sim', (4, 4, 4, 4),\n"
+        "                            ['x'])\n"
+        "print(key, em)\n")
+
+
+def test_loop_artifact_digest_stable_across_processes():
+    """The same loop kernel (hand-built DFG and traced function) must key
+    to the same digest in a fresh interpreter — the persistent cache's
+    correctness hinges on it."""
+    env = dict(os.environ,
+               PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", _digest_script()], env=env,
+                         capture_output=True, text=True, check=True)
+    dfg_key_sub, fn_line_sub = out.stdout.strip().splitlines()
+
+    dfg_key = ecompiler.dfg_digest(K.div_loop(7), (4, 4, 4, 4), "sim")
+    key, _, element_mode = ecompiler.fn_cache_key(
+        K.loop_div_fn(7), 32, "auto", "sim", (4, 4, 4, 4), ["x"])
+    assert dfg_key_sub == dfg_key
+    assert fn_line_sub == f"{key} {element_mode}"
+    assert element_mode is True                   # while needs element mode
+
+
+def test_loop_digest_distinguishes_recirculation_init():
+    """``init=None`` (recirculation) and ``init=0`` are different machines;
+    their digests must differ."""
+    import dataclasses
+
+    g = K.div_loop(7)
+    key_a = ecompiler.dfg_digest(g, (4, 4, 4, 4), "sim")
+    g2 = K.div_loop(7)
+    g2.edges = [dataclasses.replace(e, init=0)
+                if e.back and e.init is None else e for e in g2.edges]
+    key_b = ecompiler.dfg_digest(g2, (4, 4, 4, 4), "sim")
+    assert key_a != key_b
+
+
+def test_loop_artifact_bytes_roundtrip_still_simulates():
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    art = eng.compile(K.div_loop(7))
+    clone = CompiledArtifact.from_bytes(art.to_bytes())
+    assert clone.key == art.key and clone.config_words == art.config_words
+    x = rng.integers(0, 150, 24).astype(np.int32)
+    sim = simulate(clone.mapping, {"x": x})
+    np.testing.assert_array_equal(sim.outputs["out_q"], x // 7)
+    np.testing.assert_array_equal(sim.outputs["out_r"], x % 7)
+
+
+def test_loop_artifact_disk_roundtrip_and_cold_process_reuse(tmp_path):
+    cache = ArtifactCache(root=str(tmp_path))
+    eng = Engine(cache=cache)
+    art = eng.compile(K.div_loop(5))
+    # a second cache instance over the same root = a cold process
+    cold = ArtifactCache(root=str(tmp_path))
+    hit = cold.get(art.key)
+    assert hit is not None and hit.key == art.key
+    x = rng.integers(0, 99, 16).astype(np.int32)
+    outs = Engine(cache=cold).run(hit, {"x": x})
+    np.testing.assert_array_equal(outs["out_q"], x // 5)
+
+
+def test_strela_cache_0_keeps_loop_compiles_memory_only(monkeypatch,
+                                                        tmp_path):
+    monkeypatch.setenv("STRELA_CACHE", "0")
+    monkeypatch.setenv("STRELA_CACHE_DIR", str(tmp_path))
+    ecache._default = None
+    try:
+        cache = ecache.default_cache()
+        assert cache.memory_only
+        eng = Engine(cache=cache)
+        art = eng.compile(K.div_loop(7))
+        assert cache.get(art.key) is art
+        assert not any(f.endswith(".pkl") for f in os.listdir(tmp_path))
+    finally:
+        ecache._default = None
+
+
+def test_corrupted_loop_entry_recovers(tmp_path):
+    cache = ArtifactCache(root=str(tmp_path))
+    eng = Engine(cache=cache)
+    art = eng.compile(K.div_loop(7))
+    path = cache._path(art.key)
+    assert os.path.exists(path)
+    with open(path, "wb") as f:
+        f.write(b"corrupt garbage")
+    fresh = ArtifactCache(root=str(tmp_path))
+    assert fresh.get(art.key) is None             # miss, file removed
+    assert not os.path.exists(path)
+    art2 = Engine(cache=fresh).compile(K.div_loop(7))   # clean recompile
+    assert art2.key == art.key
+    assert os.path.exists(path)                   # healthy entry rewritten
+    x = rng.integers(0, 70, 8).astype(np.int32)
+    outs = Engine(cache=fresh).run(art2, {"x": x})
+    np.testing.assert_array_equal(outs["out_q"], x // 7)
+
+
+def test_traced_while_artifact_serves_from_cache(tmp_path):
+    """A traced while-loop kernel compiles once; the second compile over the
+    same persistent root is a pure cache read (no re-trace / re-P&R)."""
+    cache = ArtifactCache(root=str(tmp_path))
+    fn = K.loop_div_fn(7)
+    art = ecompiler.compile(fn, 16, cache=cache)
+    assert art.dfg.has_recirculation() and art.element_mode
+    cold = ArtifactCache(root=str(tmp_path))
+    art2 = ecompiler.compile(fn, 16, cache=cold)
+    assert art2.key == art.key
+    assert cold.stats()["disk_hits"] == 1 and cold.stats()["misses"] == 0
+
+
+def test_loop_artifact_geometry_keys_differ():
+    k44 = ecompiler.dfg_digest(K.div_loop(7), (4, 4, 4, 4), "sim")
+    k64 = ecompiler.dfg_digest(K.div_loop(7), (6, 4, 4, 4), "sim")
+    assert k44 != k64
+    art = Engine(fabric=Fabric(6, 4),
+                 cache=ArtifactCache(memory_only=True)).compile(K.div_loop(7))
+    assert art.geometry == (6, 4, 4, 4)
