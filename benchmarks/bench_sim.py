@@ -1,0 +1,125 @@
+"""Simulator benchmark: reference vs vectorized core, plus lane mode.
+
+Measures, per kernel, the wall time of one cycle-accurate simulation under
+
+  * the **reference** simulator (``elastic_sim_ref``, the original
+    token-by-token implementation kept as the ``STRELA_SIM=reference``
+    differential oracle),
+  * the **fast** core (``elastic_sim``: integer station ids, precomputed
+    fall-through structure, Python-int datapath),
+  * the **lane-parallel** mode (``simulate_lanes``: N same-mapping
+    requests advancing through one compiled station graph per sweep),
+
+asserting cycle counts and outputs stay bit-identical, and records the
+speedups in ``BENCH_sim.json`` — the before/after artifact for ISSUE 4's
+"same cycles, less wall time" claim. Where a kernel is static-rate the row
+also reports the trace-replay time: the cost of a *repeat* dispatch once
+the ``TimingTrace`` is cached (value computation excluded).
+
+    PYTHONPATH=src python -m benchmarks.bench_sim --length 64 --lanes 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from benchmarks.bench_engine import _median_wall
+from repro.core import kernels_lib as K
+from repro.core.dfg import DFG
+from repro.core.elastic_sim import TimingTrace, simulate, simulate_lanes
+from repro.core.elastic_sim_ref import simulate_reference
+from repro.core.executor import execute
+from repro.core.mapper import map_dfg
+
+_KERNELS: Dict[str, Callable[[], DFG]] = {
+    "relu": K.relu,
+    "vadd": K.vadd,
+    "fft": K.fft_butterfly,
+    "dither": K.dither,
+    "div_loop": lambda: K.div_loop(7),
+}
+
+
+def run(length: int = 64, lanes: int = 16, repeats: int = 5) -> List[dict]:
+    rng = np.random.default_rng(0)
+    rows: List[dict] = []
+    for kname, factory in _KERNELS.items():
+        g = factory()
+        m = map_dfg(g, restarts=300)
+        lo, hi = (0, 100) if g.has_recirculation() else (-64, 64)
+        ins = {name: rng.integers(lo, hi, length).astype(np.int32)
+               for name in g.inputs}
+        batch = [{name: rng.integers(lo, hi, length).astype(np.int32)
+                  for name in g.inputs} for _ in range(lanes)]
+
+        ref = simulate_reference(m, ins)
+        fast = simulate(m, ins)
+        assert ref.cycles == fast.cycles, (kname, ref.cycles, fast.cycles)
+        assert all(ref.outputs[k].tolist() == fast.outputs[k].tolist()
+                   for k in ref.outputs), kname
+
+        t_ref = _median_wall(lambda: simulate_reference(m, ins), repeats)
+        t_fast = _median_wall(lambda: simulate(m, ins), repeats)
+        t_lanes = _median_wall(lambda: simulate_lanes(m, batch), repeats)
+
+        t_replay = None
+        if g.is_static_rate():
+            trace = TimingTrace.from_sim(fast, length, (), 4)
+            outs = execute(g, ins)
+            t_replay = _median_wall(lambda: trace.replay(outs), repeats)
+
+        rows.append({
+            "kernel": kname,
+            "length": length,
+            "lanes": lanes,
+            "cycles": ref.cycles,
+            "cycles_match": ref.cycles == fast.cycles,
+            "static_rate": g.is_static_rate(),
+            "wall_us_reference": t_ref * 1e6,
+            "wall_us_fast": t_fast * 1e6,
+            "speedup": t_ref / t_fast,
+            "wall_us_lane_batch": t_lanes * 1e6,
+            "wall_us_lane_per_req": t_lanes / lanes * 1e6,
+            "wall_us_trace_replay": (t_replay * 1e6 if t_replay is not None
+                                     else None),
+        })
+    return rows
+
+
+def write_json(rows: List[dict], path: str = "BENCH_sim.json") -> str:
+    with open(path, "w") as f:
+        json.dump({"bench": "sim", "rows": rows}, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(length: int = 64, lanes: int = 16, repeats: int = 5,
+         json_path: str = "BENCH_sim.json") -> List[dict]:
+    rows = run(length=length, lanes=lanes, repeats=repeats)
+    print(f"  {'kernel':10s} {'cycles':>7s} {'ref_ms':>8s} {'fast_ms':>8s} "
+          f"{'speedup':>8s} {'replay_us':>10s}")
+    for r in rows:
+        rep = f"{r['wall_us_trace_replay']:10.1f}" \
+            if r["wall_us_trace_replay"] is not None else "         -"
+        print(f"  {r['kernel']:10s} {r['cycles']:7d} "
+              f"{r['wall_us_reference'] / 1e3:8.2f} "
+              f"{r['wall_us_fast'] / 1e3:8.2f} {r['speedup']:8.1f} {rep}")
+        assert r["cycles_match"], r
+    if json_path:
+        print(f"  wrote {write_json(rows, json_path)}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--length", type=int, default=64)
+    ap.add_argument("--lanes", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--json", default="BENCH_sim.json",
+                    help="output path ('' disables)")
+    args = ap.parse_args()
+    main(length=args.length, lanes=args.lanes, repeats=args.repeats,
+         json_path=args.json)

@@ -73,6 +73,10 @@ def main() -> None:
     print("=" * 72)
     print("Execution engine — batched vs naive dispatch")
     engine_rows = bench_engine.main(json_path="BENCH_engine.json")
+    print("=" * 72)
+    print("Elastic simulator — reference vs vectorized core (+ lane mode)")
+    from benchmarks import bench_sim
+    bench_sim.main(json_path="BENCH_sim.json")
 
     # ---- harness CSV contract ----
     print("=" * 72)

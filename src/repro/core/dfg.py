@@ -82,6 +82,12 @@ class DFG:
     inputs: List[str]        # INPUT node names, in IMN order (north border)
     outputs: List[str]       # OUTPUT node names, in OMN order (south border)
 
+    def __getstate__(self):
+        # drop analysis memos (e.g. the executor's gated-loop plan) so
+        # pickled artifacts stay lean and deterministic
+        return {k: v for k, v in self.__dict__.items()
+                if not k.startswith("_")}
+
     # -- construction helpers ----------------------------------------------
     @classmethod
     def build(cls, name: str) -> "DFGBuilder":
@@ -115,6 +121,17 @@ class DFG:
 
     def back_edges(self) -> List[Edge]:
         return [e for e in self.edges if e.back]
+
+    def is_static_rate(self) -> bool:
+        """True when the token *schedule* is independent of input values:
+        no Branch (value-steered leg selection) and no Merge (occupancy-
+        steered confluence) anywhere. Elementwise chains, MUX conditionals,
+        reductions, and loop-carried state cells all qualify — every node
+        fires on a fixed count schedule — so one cycle-accurate simulation
+        per (mapping, length, layout, bus) is valid for *all* input values
+        (the ``TimingTrace`` cache, ISSUE 4). Recirculating graphs always
+        contain a Merge, hence never qualify."""
+        return not any(n.kind in (BRANCH, MERGE) for n in self.nodes.values())
 
     def has_recirculation(self) -> bool:
         """True if the graph contains a data-dependent loop: a back edge with

@@ -17,10 +17,24 @@ Each cycle: (A) bank grants fill IMN FIFOs / drain OMN FIFOs; (B) tokens
 fall through EB chains to a combinational fixpoint; (C) FUs fire on the
 settled state, registering results (visible next cycle).
 
-The simulator executes the *mapped* netlist token-by-token, so measured
-initiation intervals include real routing hops and bank conflicts — this is
-what reproduces Table I's outputs/cycle (fft 1.95, dither II=4) rather than
-assuming them.
+This module is the *fast* implementation (ISSUE 4): the station graph is
+compiled once per mapping into flat structure-of-arrays form — integer
+station ids, precomputed successor lists and reverse maps (no ``place``
+scans or OMN column searches) — and the per-cycle loops run on plain
+Python ints instead of NumPy scalars. The original token-by-token
+implementation is preserved verbatim in ``elastic_sim_ref.py`` and
+selected by ``STRELA_SIM=reference``; the conformance suite asserts both
+produce bit-identical cycles, arrivals, and outputs.
+
+Two further products of the same core:
+  * ``simulate_lanes`` — lane-parallel mode: N independent same-mapping
+    requests advance through one compiled station graph in a single
+    per-cycle sweep (each lane is a suspended cycle-step coroutine), the
+    shape ``Engine.flush`` config-class batches present.
+  * ``TimingTrace`` — for static-rate DFGs (no Branch/Merge steering) the
+    cycle schedule is independent of input *values*; a trace recorded once
+    per (mapping, length, layout, bus) replays into a ``SimResult``
+    without re-simulating (see ``core/multishot.py`` / ``engine``).
 
 Termination: kernels with static token counts finish when every OMN received
 its expected stream. Data-dependent loops (Branch/Merge recirculation, back
@@ -31,21 +45,27 @@ condition on which the real hardware raises its end-of-kernel interrupt.
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import dfg as D
-from repro.core.executor import alu_eval, cmp_eval
+from repro.core.executor import ALU_FN_I as _ALU_FN, wrap_i as _wrap_i
 from repro.core.fabric import FU_INS, FU_OUT, Res
-from repro.core.isa import AluOp
+from repro.core.isa import CmpOp
 from repro.core.mapper import FU_PORT_OF, Mapping, Signal
-from repro.core.streams import BankArbiter, BusConfig, StreamSpec
+from repro.core.streams import BusConfig, StreamSpec
 
 EB_CAP = 2          # 2-slot elastic buffers
 FIFO_CAP = 4        # IMN/OMN damping FIFOs
 FUOUT_CAP = 2       # FU output register + delayed-valid slot
+
+# station kinds (ints — the SoA arrays index on them)
+_IMN, _EB, _FUOUT, _OMN = 0, 1, 2, 3
+# branch-leg codes
+_LEG = {"out": 0, "t": 1, "f": 2}
 
 
 @dataclasses.dataclass
@@ -55,209 +75,319 @@ class SimResult:
     arrival_cycles: Dict[str, List[int]]
     fu_firings: Dict[str, int]
     bank_beats: int
+    replayed: bool = False                # True: served from a TimingTrace
 
     def outputs_per_cycle(self) -> float:
         n = sum(len(v) for v in self.outputs.values())
         return n / self.cycles if self.cycles else 0.0
 
     def steady_ii(self) -> float:
-        """Median inter-arrival gap at the busiest OMN (steady-state II)."""
+        """Median inter-arrival gap at the busiest OMN (steady-state II).
+
+        Non-positive gaps are ignored: when lane-parallel batching
+        concatenates per-request arrival streams, the cycle counter resets
+        at each request boundary and the spurious negative gap there must
+        not enter the steady-state statistic.
+        """
         gaps: List[int] = []
         for arr in self.arrival_cycles.values():
-            gaps.extend(np.diff(arr).tolist())
+            if len(arr) > 1:
+                d = np.diff(arr)
+                gaps.extend(int(x) for x in d[d > 0])
         return float(np.median(gaps)) if gaps else float("inf")
 
 
-class _Station:
-    __slots__ = ("sid", "kind", "cap", "q", "succs", "leg", "node", "port")
+@dataclasses.dataclass
+class TimingTrace:
+    """Value-independent cycle schedule of one static-rate execution.
 
-    def __init__(self, sid, kind, cap, leg="out", node=None, port=None):
-        self.sid = sid
-        self.kind = kind          # IMN | EB | FUOUT | OMN
-        self.cap = cap
-        self.q: deque = deque()
-        self.succs: List[int] = []
-        self.leg = leg            # which branch leg this chain belongs to
-        self.node = node          # owning DFG node (FUOUT) / stream (IMN/OMN)
-        self.port = port
+    Valid for exactly one (mapping/config-class, stream length, stream
+    layout, bank count); the DFG must be static-rate (``DFG.is_static_rate``
+    — no Branch/Merge token steering), which makes every quantity below a
+    pure function of structure, never of input values.
+    """
+
+    length: int
+    layout: Tuple[int, ...]
+    n_banks: int
+    cycles: int
+    arrival_cycles: Dict[str, List[int]]
+    fu_firings: Dict[str, int]
+    bank_beats: int
+
+    @classmethod
+    def from_sim(cls, sim: SimResult, length: int, layout: Tuple[int, ...],
+                 n_banks: int) -> "TimingTrace":
+        return cls(length=length, layout=tuple(layout), n_banks=n_banks,
+                   cycles=sim.cycles,
+                   arrival_cycles={k: list(v)
+                                   for k, v in sim.arrival_cycles.items()},
+                   fu_firings=dict(sim.fu_firings),
+                   bank_beats=sim.bank_beats)
+
+    def replay(self, outputs: Dict[str, np.ndarray]) -> SimResult:
+        """Rebuild a ``SimResult`` from this trace plus executor outputs.
+
+        ``outputs`` supplies the values (the functional executor's streams,
+        already in OMN arrival order for static-rate graphs); the trace
+        supplies every timing quantity. O(length) NumPy, no simulation.
+        """
+        outs = {k: np.asarray(v, dtype=np.int32) for k, v in outputs.items()}
+        return SimResult(self.cycles, outs,
+                         {k: list(v) for k, v in self.arrival_cycles.items()},
+                         dict(self.fu_firings), self.bank_beats,
+                         replayed=True)
 
 
-def simulate(m: Mapping, inputs: Dict[str, np.ndarray],
-             streams_in: Optional[Dict[str, StreamSpec]] = None,
-             streams_out: Optional[Dict[str, StreamSpec]] = None,
-             bus: Optional[BusConfig] = None,
-             max_cycles: int = 2_000_000) -> SimResult:
-    g = m.dfg
-    bus = bus or BusConfig()
-    arb = BankArbiter(bus)
-    arrays = {k: np.asarray(v, dtype=np.int64) for k, v in inputs.items()}
-    (length,) = {v.shape[0] for v in arrays.values()}
-    if streams_in is None:
-        streams_in = {name: StreamSpec(base=i % bus.n_banks, size=length,
-                                       stride=bus.n_banks)
-                      for i, name in enumerate(g.inputs)}
-    if streams_out is None:
-        streams_out = {name: StreamSpec(base=(len(g.inputs) + i) % bus.n_banks,
-                                        size=length, stride=bus.n_banks)
-                       for i, name in enumerate(g.outputs)}
+# ---------------------------------------------------------------------------
+# station-graph compilation (once per mapping)
+# ---------------------------------------------------------------------------
 
-    # ------------------------------------------------------------------
-    # build the station graph from the mapping's route trees
-    # ------------------------------------------------------------------
-    stations: List[_Station] = []
+class StationGraph:
+    """The mapped netlist compiled to flat arrays for the cycle loops.
 
-    def new_station(kind, cap, leg="out", node=None, port=None) -> int:
-        st = _Station(len(stations), kind, cap, leg, node, port)
-        stations.append(st)
-        return st.sid
+    Construction uses reverse maps built once from the ``Mapping`` —
+    ``pos -> functional node`` and ``OMN column -> OUTPUT node`` — instead
+    of the per-resource linear scans of the original implementation.
+    Station ids index parallel lists (kind / cap / successor ids / leg
+    codes); FU semantics are precompiled per functional node.
+    """
 
-    imn_station: Dict[str, int] = {}
-    omn_station: Dict[str, int] = {}
-    fuout_station: Dict[str, int] = {}
-    fu_in_station: Dict[Tuple[str, str], int] = {}   # (node, FU port) -> sid
+    def __init__(self, m: Mapping):
+        self.m = m
+        g = m.dfg
+        self.g = g
 
-    for name in g.inputs:
-        imn_station[name] = new_station("IMN", FIFO_CAP, node=name)
-    for name in g.outputs:
-        omn_station[name] = new_station("OMN", FIFO_CAP, node=name)
-    for n in m.place:
-        fuout_station[n] = new_station("FUOUT", FUOUT_CAP, node=n)
+        # reverse maps (ISSUE 4 satellite: no O(n^2) scans)
+        pos2node = {pos: n for n, pos in m.place.items()}
+        col2out = {col: oname for oname, col in m.omn_of.items()}
 
-    def registered(res: Res) -> bool:
-        return res.port.startswith("IN_") or res.port in FU_INS or \
-            res.port in ("IMN", "OMN")
+        kinds: List[int] = []
+        caps: List[int] = []
+        legs: List[int] = []
+        succs: List[List[int]] = []
+        owner: List[Optional[str]] = []
 
-    res_station: Dict[Tuple[Signal, Res], int] = {}
-    for sig, route in m.routes.items():
-        src_node, src_port = sig
-        for res, par in route.parent.items():
-            if par is None or not registered(res):
-                continue
-            if res.port == "OMN":
-                continue    # OMN stations pre-made; wired below
-            if res.port in FU_INS:
-                # FU input EB: find owning node
-                owner = None
-                for nn, pos in m.place.items():
-                    if pos == (res.r, res.c):
-                        owner = nn
-                        break
-                sid = new_station("EB", EB_CAP, leg=src_port, node=owner,
-                                  port=res.port)
-                fu_in_station[(owner, res.port)] = sid
-            else:
-                sid = new_station("EB", EB_CAP, leg=src_port)
-            res_station[(sig, res)] = sid
+        def new_station(kind: int, cap: int, leg: str = "out",
+                        node: Optional[str] = None) -> int:
+            kinds.append(kind)
+            caps.append(cap)
+            legs.append(_LEG[leg])
+            succs.append([])
+            owner.append(node)
+            return len(kinds) - 1
 
-    def station_of(sig: Signal, res: Res) -> int:
-        """Station for a tree resource: nearest registered self-or-ancestor."""
-        route = m.routes[sig]
-        cur: Optional[Res] = res
-        while cur is not None:
-            if cur.port == "IMN":
-                return imn_station[sig[0]]
-            if cur.port == "OMN":
-                # find which OUTPUT node this OMN belongs to
-                for oname, col in m.omn_of.items():
-                    if col == cur.c:
-                        return omn_station[oname]
-            if (sig, cur) in res_station:
-                return res_station[(sig, cur)]
-            if cur.port == FU_OUT and route.parent[cur] is None:
-                return fuout_station[sig[0]]
-            cur = route.parent[cur]
-        raise AssertionError("unrooted resource")
+        self.imn_station = {name: new_station(_IMN, FIFO_CAP, node=name)
+                            for name in g.inputs}
+        self.omn_station = {name: new_station(_OMN, FIFO_CAP, node=name)
+                            for name in g.outputs}
+        self.fuout_station = {n: new_station(_FUOUT, FUOUT_CAP, node=n)
+                              for n in m.place}
+        fu_in_station: Dict[Tuple[str, str], int] = {}
 
-    # wire successor lists
-    for sig, route in m.routes.items():
-        for res, par in route.parent.items():
-            if par is None:
-                continue
-            if registered(res):
-                child = (omn_station[_omn_owner(m, res.c)]
+        def registered(res: Res) -> bool:
+            return res.port.startswith("IN_") or res.port in FU_INS or \
+                res.port in ("IMN", "OMN")
+
+        res_station: Dict[Tuple[Signal, Res], int] = {}
+        for sig, route in m.routes.items():
+            src_node, src_port = sig
+            for res, par in route.parent.items():
+                if par is None or not registered(res):
+                    continue
+                if res.port == "OMN":
+                    continue    # OMN stations pre-made; wired below
+                if res.port in FU_INS:
+                    sid = new_station(_EB, EB_CAP, leg=src_port,
+                                      node=pos2node[(res.r, res.c)])
+                    fu_in_station[(pos2node[(res.r, res.c)], res.port)] = sid
+                else:
+                    sid = new_station(_EB, EB_CAP, leg=src_port)
+                res_station[(sig, res)] = sid
+        self.fu_in_station = fu_in_station
+
+        def station_of(sig: Signal, res: Res) -> int:
+            """Station for a tree resource: nearest registered
+            self-or-ancestor."""
+            route = m.routes[sig]
+            cur: Optional[Res] = res
+            while cur is not None:
+                if cur.port == "IMN":
+                    return self.imn_station[sig[0]]
+                if cur.port == "OMN":
+                    return self.omn_station[col2out[cur.c]]
+                if (sig, cur) in res_station:
+                    return res_station[(sig, cur)]
+                if cur.port == FU_OUT and route.parent[cur] is None:
+                    return self.fuout_station[sig[0]]
+                cur = route.parent[cur]
+            raise AssertionError("unrooted resource")
+
+        # wire successor lists
+        for sig, route in m.routes.items():
+            for res, par in route.parent.items():
+                if par is None or not registered(res):
+                    continue
+                child = (self.omn_station[col2out[res.c]]
                          if res.port == "OMN" else res_station.get((sig, res)))
                 parent_sid = station_of(sig, par)
-                if child is not None and child not in stations[parent_sid].succs:
-                    if stations[parent_sid].kind == "FUOUT":
+                if child is not None and child not in succs[parent_sid]:
+                    if kinds[parent_sid] == _FUOUT:
                         # the Branch leg filter applies at the FU output
                         # register: a child fed *directly* by it (e.g. an
                         # OMN in the producer's own column) must carry the
                         # signal's leg, not the station-creation default
-                        stations[child].leg = sig[1]
-                    stations[parent_sid].succs.append(child)
+                        legs[child] = _LEG[sig[1]]
+                    succs[parent_sid].append(child)
 
-    # FU semantics tables
-    fu_nodes = {n: g.nodes[n] for n in m.place}
-    fu_inputs: Dict[str, Dict[str, Optional[int]]] = {}
-    back_keys = {(e.dst, e.dst_port) for e in g.back_edges()}
-    for n in fu_nodes:
-        fu_inputs[n] = {p: fu_in_station.get((n, fp))
-                        for p, fp in (("a", "FU_A"), ("b", "FU_B"),
-                                      ("ctrl", "FU_C"))}
+        self.kinds = kinds
+        self.caps = caps
+        self.legs = legs
+        self.succs = succs
+        self.owner = owner
+        # phase-B scannable stations: those that can act in a settle pass —
+        # anything with successors, plus succ-less FUOUTs (token drop). The
+        # settle fixpoint is confluent (each station has one producer), so
+        # relaxing only the currently-occupied subset of these, worklist-
+        # driven, reaches exactly the reference fixpoint.
+        self.scannable = [k in (_IMN, _EB, _FUOUT) and (bool(s) or k == _FUOUT)
+                          for k, s in zip(kinds, succs)]
+        # reverse edges: which scannable stations feed each station (used to
+        # re-enable a backpressured producer when its consumer drains)
+        self.feeders: List[List[int]] = [[] for _ in kinds]
+        for sid, ss in enumerate(succs):
+            if self.scannable[sid]:
+                for child in ss:
+                    self.feeders[child].append(sid)
 
-    # initial tokens for loop-carried signals (register init values, Sec.
-    # III-C). The init lives at the *consumer's* FU input (data_reg_init +
-    # valid_reg_init of that PE), so it must not fork to the producer's
-    # other consumers — e.g. a scan carry that is also a kernel output.
-    # Recirculation edges (init=None) start empty: the first token to
-    # circulate is a real stream element admitted by the loop's gate.
-    for e in g.back_edges():
-        if e.init is None:
-            continue
-        sid = fu_in_station[(e.dst, FU_PORT_OF[e.dst_port])]
-        stations[sid].q.append((np.int64(e.init), frozenset(("out",))))
+        # FU semantics, precompiled per functional node: (name, kind code,
+        # op fn, const, is_reduction, emit_every, acc_init, a/b/c/out sids)
+        self.fu_list: List[Tuple] = []
+        for n in m.place:
+            nd = g.nodes[n]
+            a = fu_in_station.get((n, "FU_A"), -1)
+            b = fu_in_station.get((n, "FU_B"), -1)
+            c = fu_in_station.get((n, "FU_C"), -1)
+            fn = _ALU_FN.get(nd.op) if nd.kind == D.ALU else None
+            self.fu_list.append(
+                (n, nd.kind, fn, nd.value, nd.is_reduction(), nd.emit_every,
+                 nd.acc_init, nd.op, a, b, c, self.fuout_station[n]))
 
-    # reduction accumulators
-    accs = {n: np.int64(nd.acc_init) for n, nd in fu_nodes.items()
-            if nd.is_reduction()}
-    acc_count = {n: 0 for n in accs}
+        # initial tokens for loop-carried signals (register init values,
+        # Sec. III-C), seeded at the *consumer's* FU input; recirculation
+        # edges (init=None) start empty.
+        self.init_tokens: List[Tuple[int, int]] = []
+        for e in g.back_edges():
+            if e.init is None:
+                continue
+            sid = fu_in_station[(e.dst, FU_PORT_OF[e.dst_port])]
+            self.init_tokens.append((sid, _wrap_i(int(e.init))))
 
-    # IMN/OMN progress
-    imn_sent = {name: 0 for name in g.inputs}
-    omn_recv: Dict[str, List[Tuple[int, int]]] = {name: [] for name in g.outputs}
-    # Token-exhaustion termination (data-dependent loops): a recirculating
-    # graph's output token counts depend on runtime predicates (an exit leg
-    # may fire once per element, a discarded leg never), so no static
-    # expectation exists. Completion is instead declared when the input
-    # streams are exhausted AND the elastic network quiesces — exactly when
-    # real hardware raises its end-of-kernel interrupt (Sec. V-B).
-    data_dependent = g.has_recirculation()
+        self.data_dependent = g.has_recirculation()
+
+
+def _expected_counts(g: D.DFG, length: int, data_dependent: bool
+                     ) -> Dict[str, int]:
     expected: Dict[str, int] = {}
     for name in g.outputs:
         producer = g.operand(name, "a").src
         nd = g.nodes[producer]
         if data_dependent or g.nodes[name].emit_every == 0:
-            # last-value OMN: token count equals producer emissions (+ any
-            # init token that reaches it); completion is tracked by IMN drain.
             expected[name] = -1
         elif nd.is_reduction() and nd.emit_every:
             expected[name] = length // nd.emit_every
         else:
             expected[name] = length
-    fu_firings = {n: 0 for n in fu_nodes}
+    return expected
+
+
+# ---------------------------------------------------------------------------
+# the cycle engine — one coroutine per request, yielding once per cycle
+# ---------------------------------------------------------------------------
+
+def _default_streams(g: D.DFG, length: int, n_banks: int):
+    sin = {name: StreamSpec(base=i % n_banks, size=length, stride=n_banks)
+           for i, name in enumerate(g.inputs)}
+    sout = {name: StreamSpec(base=(len(g.inputs) + i) % n_banks,
+                             size=length, stride=n_banks)
+            for i, name in enumerate(g.outputs)}
+    return sin, sout
+
+
+def _run_lane(sg: StationGraph, inputs: Dict[str, np.ndarray],
+              streams_in: Dict[str, StreamSpec],
+              streams_out: Dict[str, StreamSpec],
+              bus: BusConfig, max_cycles: int):
+    """Generator advancing one request by one cycle per ``next()`` call;
+    returns the ``SimResult`` via ``StopIteration.value``.
+
+    The generator form is what makes lane parallelism free: every lane's
+    full cycle state lives in this frame's locals, and ``simulate_lanes``
+    sweeps ``next()`` across lanes to advance N requests in lockstep
+    through one shared ``StationGraph``.
+    """
+    g = sg.g
+    n_banks = bus.n_banks
+    length, = {np.asarray(v).shape[0] for v in inputs.values()}
+
+    caps, legs, kinds = sg.caps, sg.legs, sg.kinds
+    qs: List[deque] = [deque() for _ in kinds]
+    for sid, val in sg.init_tokens:
+        qs[sid].append(val)
+
+    # per-lane fanout tables: (child queue, cap, leg code, child sid if the
+    # child can itself act in a settle pass, else -1) — queue objects are
+    # resolved once so the settle loop does no indexing, and the sid lets a
+    # push activate the child for fall-through cascading
+    is_fuout = [k == _FUOUT for k in kinds]
+    scannable = sg.scannable
+    fan: List[List[Tuple[deque, int, int, int]]] = [
+        [(qs[s], caps[s], legs[s], s if scannable[s] else -1) for s in ss]
+        for ss in sg.succs]
+    feeders = sg.feeders
+    # occupied scannable stations (seeds each cycle's settle worklist)
+    active: set = set()
+
+    # per-run FU state; runtime tuples bind the queue objects directly
+    fu_list = sg.fu_list
+    accs = {n: _wrap_i(int(acc_init)) for
+            (n, _, _, _, red, _, acc_init, *_r) in fu_list if red}
+    acc_count = {n: 0 for n in accs}
+    fu_firings = {fu[0]: 0 for fu in fu_list}
+    for fu in fu_list:
+        if fu[1] == D.CMP and fu[7] not in (CmpOp.EQZ, CmpOp.GTZ):
+            raise ValueError(f"bad CMP op {fu[7]}")
+    is_eqz = {fu[0]: fu[7] == CmpOp.EQZ for fu in fu_list
+              if fu[1] == D.CMP}
+    fu_rt = [(n, kind, fn, const, red, emit_every, acc_init,
+              qs[a] if a >= 0 else None, qs[b] if b >= 0 else None,
+              qs[c] if c >= 0 else None, qs[o], caps[o], o)
+             for (n, kind, fn, const, red, emit_every, acc_init, _op,
+                  a, b, c, o) in fu_list]
+
+    # IMN/OMN progress + precomputed input bank sequences and data
+    in_names = list(g.inputs)
+    out_names = list(g.outputs)
+    n_in = len(in_names)
+    imn_sids = [sg.imn_station[n] for n in in_names]
+    omn_sids = [sg.omn_station[n] for n in out_names]
+    in_banks = [[streams_in[n].bank(k, n_banks) for k in range(length)]
+                for n in in_names]
+    data_in = [[int(x) for x in np.asarray(inputs[n])] for n in in_names]
+    out_spec = [streams_out[n] for n in out_names]
+    imn_sent = [0] * n_in
+    omn_vals: List[List[int]] = [[] for _ in out_names]
+    omn_cycs: List[List[int]] = [[] for _ in out_names]
+    expected = _expected_counts(g, length, sg.data_dependent)
     bank_beats = 0
+    n_io = n_in + len(out_names)
+    pending_in = n_in * length
 
-    def succs_ready(st: _Station, legs: frozenset) -> bool:
-        # Leg selection (the Branch valid demux) applies at the FU output
-        # register; mid-route EB chains forward to all their children.
-        for s in st.succs:
-            child = stations[s]
-            if st.kind == "FUOUT" and child.leg not in legs:
-                continue
-            if len(child.q) >= child.cap:
-                return False
-        return True
+    # per-bank round-robin arbiter state (mirrors streams.BankArbiter)
+    last_grant: Dict[int, int] = {}
 
-    def push_succs(st: _Station, value, legs: frozenset):
-        for s in st.succs:
-            child = stations[s]
-            if st.kind == "FUOUT" and child.leg not in legs:
-                continue
-            child.q.append((value, frozenset(("out",))))
+    ALU, CMP, MUX, BRANCH, MERGE = D.ALU, D.CMP, D.MUX, D.BRANCH, D.MERGE
 
-    # ------------------------------------------------------------------
-    # main loop — two-phase: plan on cycle-start state, then commit
-    # ------------------------------------------------------------------
     cycle = 0
     while cycle < max_cycles:
         cycle += 1
@@ -265,163 +395,299 @@ def simulate(m: Mapping, inputs: Dict[str, np.ndarray],
 
         # --- phase A: bank arbitration (IMN fetches + OMN stores) ---
         reqs: List[int] = []
-        for name in g.inputs:
-            st = stations[imn_station[name]]
-            want = imn_sent[name] < length and len(st.q) < st.cap
-            reqs.append(streams_in[name].bank(imn_sent[name], bus.n_banks)
-                        if want else -1)
-        for name in g.outputs:
-            st = stations[omn_station[name]]
-            want = len(st.q) > 0
-            reqs.append(streams_out[name].bank(len(omn_recv[name]), bus.n_banks)
-                        if want else -1)
-        grants = arb.grant(reqs)
-        for i, name in enumerate(g.inputs):
-            if grants[i]:
-                st = stations[imn_station[name]]
-                st.q.append((arrays[name][imn_sent[name]], frozenset(("out",))))
-                imn_sent[name] += 1
+        any_req = False
+        if pending_in:
+            for i in range(n_in):
+                sid = imn_sids[i]
+                if imn_sent[i] < length and len(qs[sid]) < caps[sid]:
+                    reqs.append(in_banks[i][imn_sent[i]])
+                    any_req = True
+                else:
+                    reqs.append(-1)
+        else:
+            reqs.extend([-1] * n_in)
+        for j, sid in enumerate(omn_sids):
+            if qs[sid]:
+                reqs.append(out_spec[j].bank(len(omn_vals[j]), n_banks))
+                any_req = True
+            else:
+                reqs.append(-1)
+        if any_req:
+            by_bank: Dict[int, List[int]] = {}
+            for i, bk in enumerate(reqs):
+                if bk >= 0:
+                    by_bank.setdefault(bk, []).append(i)
+            for bk, nodes in by_bank.items():
+                start = last_grant.get(bk, -1)
+                pick = (nodes[0] if len(nodes) == 1 else
+                        min(nodes, key=lambda i: ((i - start - 1) % n_io)))
+                last_grant[bk] = pick
                 bank_beats += 1
                 progress = True
-        for j, name in enumerate(g.outputs):
-            if grants[len(g.inputs) + j]:
-                st = stations[omn_station[name]]
-                value, _ = st.q.popleft()
-                omn_recv[name].append((int(value), cycle))
-                bank_beats += 1
-                progress = True
+                if pick < n_in:
+                    sid = imn_sids[pick]
+                    qs[sid].append(data_in[pick][imn_sent[pick]])
+                    imn_sent[pick] += 1
+                    pending_in -= 1
+                    if scannable[sid]:
+                        active.add(sid)
+                else:
+                    j = pick - n_in
+                    omn_vals[j].append(qs[omn_sids[j]].popleft())
+                    omn_cycs[j].append(cycle)
 
         # --- phase B: combinational settle (fall-through EB chains) ---
-        settled = False
-        while not settled:
-            settled = True
-            for st in stations:
-                if st.kind in ("EB", "IMN", "FUOUT") and st.q:
-                    if not st.succs:
-                        if st.kind == "FUOUT":
-                            # empty Fork-Sender mask: the FU result is
-                            # deliberately discarded (find2min drops its
-                            # loser this way, Sec. VI-B) — never backpressure
-                            st.q.popleft()
-                            settled = False
-                            progress = True
-                        continue
-                    value, legs = st.q[0]
-                    if succs_ready(st, legs):
-                        st.q.popleft()
-                        push_succs(st, value, legs)
-                        settled = False
+        # worklist relaxation: the fixpoint is confluent (each station has
+        # one producer), so event-driven scheduling lands on exactly the
+        # reference scan's final state. A move re-enqueues the mover (more
+        # tokens may fall through), its now-occupied children, and its
+        # feeders (their backpressure just eased).
+        if active:
+            work = sorted(active)
+            wset = set(work)
+            qi = 0
+            while qi < len(work):
+                sid = work[qi]
+                qi += 1
+                wset.discard(sid)
+                q = qs[sid]
+                if not q:
+                    active.discard(sid)
+                    continue
+                ff = fan[sid]
+                if is_fuout[sid]:
+                    if not ff:
+                        # empty Fork-Sender mask: the FU result is
+                        # deliberately discarded (find2min drops its loser
+                        # this way, Sec. VI-B) — never backpressure
+                        q.clear()
+                        active.discard(sid)
                         progress = True
+                        continue
+                    value, leg = q[0]
+                    ok = True
+                    for cq, cap, cleg, _cs in ff:
+                        if cleg == leg and len(cq) >= cap:
+                            ok = False
+                            break
+                    if not ok:
+                        continue
+                    q.popleft()
+                    for cq, cap, cleg, cs in ff:
+                        if cleg == leg:
+                            cq.append(value)
+                            if cs >= 0:
+                                active.add(cs)
+                                if cs not in wset:
+                                    work.append(cs)
+                                    wset.add(cs)
+                else:
+                    ok = True
+                    for cq, cap, _cl, _cs in ff:
+                        if len(cq) >= cap:
+                            ok = False
+                            break
+                    if not ok:
+                        continue
+                    value = q.popleft()
+                    for cq, cap, _cl, cs in ff:
+                        cq.append(value)
+                        if cs >= 0:
+                            active.add(cs)
+                            if cs not in wset:
+                                work.append(cs)
+                                wset.add(cs)
+                progress = True
+                if q:
+                    if sid not in wset:
+                        work.append(sid)
+                        wset.add(sid)
+                else:
+                    active.discard(sid)
+                for p in feeders[sid]:
+                    if p not in wset and qs[p]:
+                        work.append(p)
+                        wset.add(p)
 
         # --- phase C: FU firings on the settled state (registered) ---
-        fires: List[str] = []
-        for n, nd in fu_nodes.items():
-            ins = fu_inputs[n]
-            a_sid, b_sid, c_sid = ins["a"], ins["b"], ins["ctrl"]
-            have = lambda sid: sid is not None and len(stations[sid].q) > 0
-            out_st = stations[fuout_station[n]]
-            if nd.kind == D.MERGE:
-                if not (have(a_sid) or have(b_sid)):
+        fires: List[Tuple] = []
+        for fu in fu_rt:
+            kind = fu[1]
+            aq, bq, cq, oq = fu[7], fu[8], fu[9], fu[10]
+            if kind == MERGE:
+                if not (aq or bq):
                     continue      # priority-a confluence (Sec. III-C Merge)
             else:
-                if a_sid is not None and not have(a_sid):
+                if aq is not None and not aq:
                     continue
-                if b_sid is not None and not have(b_sid):
+                if bq is not None and not bq:
                     continue
-                if c_sid is not None and not have(c_sid):
+                if cq is not None and not cq:
                     continue
-            if nd.is_reduction():
-                # non-emitting firings don't need downstream space
-                will_emit = _emits(nd, acc_count[n] + 1, length)
-                if will_emit and len(out_st.q) >= out_st.cap:
+            if fu[4]:
+                # reduction: non-emitting firings don't need downstream space
+                count = acc_count[fu[0]] + 1
+                emit_every = fu[5]
+                will_emit = (emit_every == 1 or
+                             (emit_every == 0 and count == length) or
+                             (emit_every > 1 and count % emit_every == 0))
+                if will_emit and len(oq) >= fu[11]:
                     continue
-            elif len(out_st.q) >= out_st.cap:
+            elif len(oq) >= fu[11]:
                 continue
-            fires.append(n)
+            fires.append(fu)
 
-        for n in fires:
-            nd = fu_nodes[n]
-            ins = fu_inputs[n]
-            out_st = stations[fuout_station[n]]
-            aq = stations[ins["a"]].q if ins["a"] is not None else None
-            bq = stations[ins["b"]].q if ins["b"] is not None else None
-            cq = stations[ins["ctrl"]].q if ins["ctrl"] is not None else None
+        for (n, kind, fn, const, red, emit_every, acc_init,
+             aq, bq, cq, out_q, _ocap, out_sid) in fires:
             fu_firings[n] += 1
             progress = True
-            if nd.kind == D.MERGE:
-                src = aq if aq and len(aq) else bq
-                value, _ = src.popleft()
-                out_st.q.append((value, frozenset(("out",))))
+            active.add(out_sid)      # FUOUTs are always settle-scannable
+            if kind == MERGE:
+                src = aq if aq else bq
+                out_q.append((src.popleft(), 0))
                 continue
-            a = aq.popleft()[0] if aq is not None else None
-            b = bq.popleft()[0] if bq is not None else None
-            c = cq.popleft()[0] if cq is not None else None
-            if nd.kind == D.ALU:
-                if nd.is_reduction():
-                    x = np.int64(nd.value) if nd.value is not None else a
-                    accs[n] = np.int64(alu_eval(nd.op, accs[n], x))
-                    acc_count[n] += 1
-                    if _emits(nd, acc_count[n], length):
-                        out_st.q.append((accs[n], frozenset(("out",))))
-                        if nd.emit_every > 1:
-                            accs[n] = np.int64(nd.acc_init)
+            a = aq.popleft() if aq is not None else None
+            b = bq.popleft() if bq is not None else None
+            c = cq.popleft() if cq is not None else None
+            if kind == ALU:
+                if red:
+                    x = const if const is not None else a
+                    acc = fn(accs[n], x)
+                    count = acc_count[n] = acc_count[n] + 1
+                    if emit_every == 1 or \
+                            (emit_every == 0 and count == length) or \
+                            (emit_every > 1 and count % emit_every == 0):
+                        out_q.append((acc, 0))
+                        if emit_every > 1:
+                            acc = _wrap_i(int(acc_init))
+                    accs[n] = acc
                 else:
-                    bb = b if b is not None else np.int64(nd.value)
-                    out_st.q.append((np.int64(alu_eval(nd.op, a, bb)),
-                                     frozenset(("out",))))
-            elif nd.kind == D.CMP:
+                    out_q.append((fn(a, b if b is not None else const), 0))
+            elif kind == CMP:
                 av = a
                 if b is not None:
-                    av = np.int64(alu_eval(AluOp.SUB, a, b))
-                elif nd.value is not None:
-                    av = np.int64(alu_eval(AluOp.SUB, a, np.int64(nd.value)))
-                out_st.q.append((np.int64(cmp_eval(nd.op, av)),
-                                 frozenset(("out",))))
-            elif nd.kind == D.MUX:
-                bb = b if b is not None else np.int64(nd.value)
-                out_st.q.append((a if c != 0 else bb, frozenset(("out",))))
-            elif nd.kind == D.BRANCH:
-                leg = "t" if c != 0 else "f"
-                out_st.q.append((a, frozenset((leg,))))
+                    av = _wrap_i(a - b)
+                elif const is not None:
+                    av = _wrap_i(a - const)
+                hit = (av == 0) if is_eqz[n] else (av > 0)
+                out_q.append((1 if hit else 0, 0))
+            elif kind == MUX:
+                bb = b if b is not None else const
+                out_q.append((a if c != 0 else bb, 0))
+            elif kind == BRANCH:
+                out_q.append((a, 1 if c != 0 else 2))
 
         if not progress:
             # quiescent: either done (only loop-carried leftovers remain in
             # their EBs, as in real hardware) or a true deadlock.
             cycle -= 1
-            drained = all(imn_sent[i] >= length for i in g.inputs)
-            met = all(expected[name] < 0 or len(omn_recv[name]) >= expected[name]
-                      for name in g.outputs)
+            drained = all(s >= length for s in imn_sent)
+            met = all(expected[name] < 0 or len(omn_vals[j]) >= expected[name]
+                      for j, name in enumerate(out_names))
             if drained and met:
                 break
             raise RuntimeError(
                 f"deadlock in kernel {g.name} at cycle {cycle}: "
-                f"imn_sent={imn_sent}, received="
-                f"{ {k: len(v) for k, v in omn_recv.items()} }, "
+                f"imn_sent={dict(zip(in_names, imn_sent))}, received="
+                f"{ {k: len(v) for k, v in zip(out_names, omn_vals)} }, "
                 f"expected={expected}")
+        yield cycle
     else:
-        raise RuntimeError(f"simulation did not converge in {max_cycles} cycles "
-                           f"(kernel {g.name}; likely routing deadlock)")
+        raise RuntimeError(f"simulation did not converge in {max_cycles} "
+                           f"cycles (kernel {g.name}; likely routing "
+                           f"deadlock)")
 
-    outputs = {name: np.array([v for v, _ in omn_recv[name]], dtype=np.int32)
-               for name in g.outputs}
-    arrivals = {name: [cyc for _, cyc in omn_recv[name]] for name in g.outputs}
+    outputs = {name: np.array(omn_vals[j], dtype=np.int32)
+               for j, name in enumerate(out_names)}
+    arrivals = {name: omn_cycs[j] for j, name in enumerate(out_names)}
     # last-value OMNs (stride 0): every token overwrote one word
-    for name in g.outputs:
+    for name in out_names:
         if g.nodes[name].emit_every == 0 and len(outputs[name]):
             outputs[name] = outputs[name][-1:]
     return SimResult(cycle, outputs, arrivals, fu_firings, bank_beats)
 
 
-def _emits(nd: D.Node, count: int, length: int) -> bool:
-    if nd.emit_every == 1:
-        return True
-    if nd.emit_every == 0:
-        return count == length
-    return count % nd.emit_every == 0
+def _drive(gen) -> SimResult:
+    try:
+        while True:
+            next(gen)
+    except StopIteration as stop:
+        return stop.value
 
 
-def _omn_owner(m: Mapping, col: int) -> str:
-    for oname, c in m.omn_of.items():
-        if c == col:
-            return oname
-    raise KeyError(col)
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def simulate(m: Mapping, inputs: Dict[str, np.ndarray],
+             streams_in: Optional[Dict[str, StreamSpec]] = None,
+             streams_out: Optional[Dict[str, StreamSpec]] = None,
+             bus: Optional[BusConfig] = None,
+             max_cycles: int = 2_000_000) -> SimResult:
+    """Cycle-accurate simulation of one request on the mapped netlist.
+
+    ``STRELA_SIM=reference`` in the environment selects the original
+    token-by-token implementation (``elastic_sim_ref``) for differential
+    checking; the default fast core is bit-identical to it.
+    """
+    if os.environ.get("STRELA_SIM", "") == "reference":
+        from repro.core import elastic_sim_ref
+        return elastic_sim_ref.simulate_reference(
+            m, inputs, streams_in=streams_in, streams_out=streams_out,
+            bus=bus, max_cycles=max_cycles)
+    bus = bus or BusConfig()
+    if streams_in is None or streams_out is None:
+        length, = {np.asarray(v).shape[0] for v in inputs.values()}
+        din, dout = _default_streams(m.dfg, length, bus.n_banks)
+        streams_in = streams_in or din
+        streams_out = streams_out or dout
+    return _drive(_run_lane(_station_graph(m), inputs, streams_in,
+                            streams_out, bus, max_cycles))
+
+
+def _station_graph(m: Mapping) -> StationGraph:
+    """Per-mapping memo: routes are immutable once mapped, so the compiled
+    station structure (not the per-run queues) is computed once."""
+    sg = m.__dict__.get("_station_graph")
+    if sg is None:
+        sg = StationGraph(m)
+        m.__dict__["_station_graph"] = sg
+    return sg
+
+
+def simulate_lanes(m: Mapping, inputs_list: List[Dict[str, np.ndarray]],
+                   streams_in: Optional[Dict[str, StreamSpec]] = None,
+                   streams_out: Optional[Dict[str, StreamSpec]] = None,
+                   bus: Optional[BusConfig] = None,
+                   max_cycles: int = 2_000_000) -> List[SimResult]:
+    """Lane-parallel simulation: N independent same-mapping requests.
+
+    The station graph is compiled once and every request becomes a lane —
+    a suspended cycle-step coroutine over the shared structure. One sweep
+    of the outer loop advances all live lanes by one cycle; lanes retire
+    individually as they quiesce. Results are bit-identical to N separate
+    ``simulate`` calls (asserted by tests/test_timing_trace.py).
+    """
+    bus = bus or BusConfig()
+    sg = _station_graph(m)
+    lanes = []
+    for inputs in inputs_list:
+        sin, sout = streams_in, streams_out
+        if sin is None or sout is None:
+            length, = {np.asarray(v).shape[0] for v in inputs.values()}
+            din, dout = _default_streams(m.dfg, length, bus.n_banks)
+            sin = sin or din
+            sout = sout or dout
+        lanes.append(_run_lane(sg, inputs, sin, sout, bus, max_cycles))
+    results: List[Optional[SimResult]] = [None] * len(lanes)
+    live = list(range(len(lanes)))
+    while live:
+        nxt = []
+        for i in live:
+            try:
+                next(lanes[i])
+                nxt.append(i)
+            except StopIteration as stop:
+                results[i] = stop.value
+        live = nxt
+    return results

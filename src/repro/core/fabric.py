@@ -47,6 +47,12 @@ class Fabric:
     n_imns: int = 4
     n_omns: int = 4
 
+    def __getstate__(self):
+        # drop the routing-resource index memo (``rindex``): it is cheap
+        # to rebuild and would otherwise bloat every pickled Mapping
+        return {k: v for k, v in self.__dict__.items()
+                if not k.startswith("_")}
+
     def pes(self) -> Iterable[Tuple[int, int]]:
         for r in range(self.rows):
             for c in range(self.cols):
@@ -118,6 +124,22 @@ class Fabric:
                     + [Res(r, c, "FU_A"), Res(r, c, "FU_B")])
         return []
 
+    def rindex(self) -> "FabricIndex":
+        """Cached integer index of this fabric's routing-resource graph.
+
+        The negotiated router runs thousands of Dijkstra expansions per
+        mapping; hashing frozen ``Res`` dataclasses dominated that cost
+        (ISSUE 4). The index enumerates every resource once, assigns dense
+        integer ids, and precomputes ``fanout`` as id adjacency lists, so
+        the router's hot loop touches only ints and flat lists.
+        """
+        idx = self.__dict__.get("_rindex")
+        if idx is None or idx.geometry != (self.rows, self.cols,
+                                           self.n_imns, self.n_omns):
+            idx = FabricIndex(self)
+            self.__dict__["_rindex"] = idx
+        return idx
+
     def hop_latency(self, res: Res) -> int:
         """Forward latency contributed by traversing ``res`` (cycles).
 
@@ -129,3 +151,38 @@ class Fabric:
         if res.port.startswith("IN_") or res.port in FU_INS:
             return 1
         return 0
+
+
+class FabricIndex:
+    """Dense-integer view of a fabric's routing resources.
+
+    ``res_of[i]`` / ``id_of[res]`` translate between ids and ``Res``;
+    ``fanout_ids[i]`` mirrors ``Fabric.fanout`` exactly (same order), and
+    the ``is_*`` flags precompute the router's per-port skip tests.
+    """
+
+    def __init__(self, fabric: Fabric):
+        self.geometry = (fabric.rows, fabric.cols, fabric.n_imns,
+                         fabric.n_omns)
+        res_list: List[Res] = []
+        for c in range(fabric.n_imns):
+            res_list.append(fabric.imn_res(c))
+        for c in range(fabric.n_omns):
+            res_list.append(fabric.omn_res(c))
+        pe_ports = IN_PORTS + OUT_PORTS + tuple(FU_INS) + (FU_OUT,)
+        for r in range(fabric.rows):
+            for c in range(fabric.cols):
+                for p in pe_ports:
+                    res_list.append(Res(r, c, p))
+        self.res_of: List[Res] = res_list
+        self.id_of: Dict[Res, int] = {res: i for i, res in enumerate(res_list)}
+        # router's view of fanout: FU_OUT entries are dropped up front (a
+        # foreign FU is never traversable, and skipping it consumes no
+        # router state), order otherwise preserved
+        self.fanout_ids: List[List[int]] = [
+            [self.id_of[n] for n in fabric.fanout(res) if n.port != FU_OUT]
+            for res in res_list]
+        # terminals may only be entered when they are the sink being routed
+        self.is_terminal: List[bool] = [res.port in FU_INS or
+                                        res.port == "OMN"
+                                        for res in res_list]

@@ -52,13 +52,25 @@ class Mapping:
     routes: Dict[Signal, Route]
     edge_dest: Dict[Tuple[str, str, str, str], Res]   # (src,sp,dst,dp) -> sink
 
+    def __getstate__(self):
+        # drop memo fields (_active_pes, _station_graph — the latter holds
+        # compiled closures) so pickled artifacts stay lean and loadable
+        return {k: v for k, v in self.__dict__.items()
+                if not k.startswith("_")}
+
     def active_pes(self) -> Set[Tuple[int, int]]:
-        """PEs carrying an FU or any route-through traffic (need config)."""
-        act = set(self.place.values())
-        for route in self.routes.values():
-            for res in route.parent:
-                if 0 <= res.r < self.fabric.rows and 0 <= res.c < self.fabric.cols:
-                    act.add((res.r, res.c))
+        """PEs carrying an FU or any route-through traffic (need config).
+        Memoized: routes are immutable once mapped, and per-request
+        dispatch asks for the config cost on every run."""
+        act = self.__dict__.get("_active_pes")
+        if act is None:
+            act = set(self.place.values())
+            for route in self.routes.values():
+                for res in route.parent:
+                    if 0 <= res.r < self.fabric.rows and \
+                            0 <= res.c < self.fabric.cols:
+                        act.add((res.r, res.c))
+            self.__dict__["_active_pes"] = act
         return act
 
     def n_active_pes(self) -> int:
@@ -120,89 +132,134 @@ def auto_unroll(g: D.DFG, fabric: Optional[Fabric] = None,
 # the standard algorithm for mesh fabrics. Signals first route greedily
 # (sharing allowed at a cost), then congestion history drives rip-up/reroute
 # until every port resource is owned by exactly one signal.
+#
+# The hot loop runs on the fabric's dense integer resource index
+# (``Fabric.rindex``): ids replace frozen ``Res`` dataclasses, whose
+# hashing dominated mapping wall time (ISSUE 4). The search order, cost
+# arithmetic, and RNG consumption are exactly those of the original
+# ``Res``-keyed router, so every mapping (and every downstream cycle
+# count) is bit-identical.
 # ---------------------------------------------------------------------------
 
 import heapq
+
+_INF = float("inf")
 
 
 class _NegotiatedRouter:
     def __init__(self, fabric: Fabric, rng: random.Random):
         self.fabric = fabric
         self.rng = rng
-        self.hist: Dict[Res, float] = {}          # accumulated congestion
+        self.idx = fabric.rindex()
+        n = len(self.idx.res_of)
+        self.hist: List[float] = [0.0] * n
+        # version-stamped per-resource search state: arrays live across
+        # dijkstra calls, a bumped epoch invalidates them in O(1)
+        self._dist: List[float] = [0.0] * n
+        self._parent: List[int] = [0] * n
+        self._seen: List[int] = [0] * n           # epoch when dist was set
+        self._done: List[int] = [0] * n           # epoch when finalized
+        self._epoch = 0
+        self._usage: List[Optional[Set[Signal]]] = [None] * n
 
     def route_all(self, demands: List[Tuple[Signal, Res, List[Res]]],
                   max_iters: int = 48) -> Dict[Signal, Route]:
         """demands: (signal, source res, sink res list). Returns conflict-free
         routes or raises MappingError."""
+        idx = self.idx
+        id_of = idx.id_of
+        dem = [(sig, id_of[src], [id_of[d] for d in sinks])
+               for sig, src, sinks in demands]
         pres_fac = 0.6
-        routes: Dict[Signal, Route] = {}
+        trees: Dict[Signal, Dict[int, int]] = {}
+        n_over = 0
         for it in range(max_iters):
-            usage: Dict[Res, Set[Signal]] = {}
-            routes = {}
-            for sig, src, sinks in demands:
+            usage = self._usage = [None] * len(idx.res_of)
+            trees = {}
+            for sig, src, sinks in dem:
                 # sources (FU_OUT / IMN) are exclusive by placement; branch
                 # t/f legs legitimately share their FU_OUT, so sources are
                 # not congestion-counted.
-                tree = Route(src, {src: None})
+                tree = {src: -1}                  # res id -> parent id (-1 = src)
                 for dst in sinks:
-                    if not self._dijkstra(sig, tree, dst, usage, pres_fac):
-                        raise MappingError(f"no path {sig} -> {dst} "
+                    if not self._dijkstra(sig, tree, dst, pres_fac):
+                        raise MappingError(f"no path {sig} -> {idx.res_of[dst]} "
                                            f"(disconnected or terminal blocked)")
-                routes[sig] = tree
-            over = {res: users for res, users in usage.items() if len(users) > 1}
-            if not over:
+                trees[sig] = tree
+            n_over = 0
+            for rid, users in enumerate(usage):
+                if users is not None and len(users) > 1:
+                    self.hist[rid] += len(users) - 1
+                    n_over += 1
+            if not n_over:
+                routes: Dict[Signal, Route] = {}
+                for sig, src, _ in dem:
+                    parent = {idx.res_of[rid]: (None if pid < 0
+                                                else idx.res_of[pid])
+                              for rid, pid in trees[sig].items()}
+                    routes[sig] = Route(idx.res_of[src], parent)
                 return routes
-            for res, users in over.items():
-                self.hist[res] = self.hist.get(res, 0.0) + (len(users) - 1)
             pres_fac *= 1.7
         raise MappingError(f"congestion unresolved after {max_iters} iterations "
-                           f"({len(over)} oversubscribed ports)")
+                           f"({n_over} oversubscribed ports)")
 
-    @staticmethod
-    def _claim(usage, res, sig):
-        usage.setdefault(res, set()).add(sig)
+    def _claim(self, rid: int, sig) -> None:
+        s = self._usage[rid]
+        if s is None:
+            self._usage[rid] = {sig}
+        else:
+            s.add(sig)
 
-    def _cost(self, res: Res, sig: Signal, usage, pres_fac: float) -> float:
-        others = len(usage.get(res, set()) - {sig})
-        return (1.0 + self.hist.get(res, 0.0)) * (1.0 + others * pres_fac)
-
-    def _dijkstra(self, sig, tree: Route, dst: Res, usage, pres_fac) -> bool:
-        if dst in tree.parent:
-            self._claim(usage, dst, sig)
+    def _dijkstra(self, sig, tree: Dict[int, int], dst: int,
+                  pres_fac) -> bool:
+        if dst in tree:
+            self._claim(dst, sig)
             return True
-        dist: Dict[Res, float] = {res: 0.0 for res in tree.parent}
-        parent: Dict[Res, Res] = {}
-        heap = [(0.0, self.rng.random(), res) for res in tree.parent]
+        idx = self.idx
+        fan = idx.fanout_ids
+        hist = self.hist
+        is_terminal = idx.is_terminal
+        rnd = self.rng.random
+        usage = self._usage
+        self._epoch += 1
+        epoch = self._epoch
+        dist, parent = self._dist, self._parent
+        seen, done = self._seen, self._done
+        heap = []
+        for rid in tree:
+            dist[rid] = 0.0
+            seen[rid] = epoch
+            heap.append((0.0, rnd(), rid))
         heapq.heapify(heap)
-        done: Set[Res] = set()
         while heap:
             d, _, cur = heapq.heappop(heap)
-            if cur in done:
+            if done[cur] == epoch:
                 continue
-            done.add(cur)
+            done[cur] = epoch
             if cur == dst:
-                chain: List[Res] = []
+                chain: List[int] = []
                 node = cur
-                while node not in tree.parent:
+                while node not in tree:
                     chain.append(node)
                     node = parent[node]
-                for res in reversed(chain):
-                    tree.parent[res] = parent[res]
-                    self._claim(usage, res, sig)
+                for rid in reversed(chain):
+                    tree[rid] = parent[rid]
+                    self._claim(rid, sig)
                 return True
-            for nxt in self.fabric.fanout(cur):
-                if nxt.port == FU_OUT:
-                    continue                      # never traverse a foreign FU
-                if nxt.port in FU_INS and nxt != dst:
-                    continue                      # FU inputs are terminals
-                if nxt.port == "OMN" and nxt != dst:
-                    continue
-                nd = d + self._cost(nxt, sig, usage, pres_fac)
-                if nd < dist.get(nxt, float("inf")):
+            for nxt in fan[cur]:
+                if is_terminal[nxt] and nxt != dst:
+                    continue                      # FU inputs / OMNs: sinks only
+                users = usage[nxt]
+                if users:
+                    nd = d + (1.0 + hist[nxt]) * \
+                        (1.0 + (len(users) - (sig in users)) * pres_fac)
+                else:
+                    nd = d + 1.0 + hist[nxt]
+                if seen[nxt] != epoch or nd < dist[nxt]:
                     dist[nxt] = nd
+                    seen[nxt] = epoch
                     parent[nxt] = cur
-                    heapq.heappush(heap, (nd, self.rng.random(), nxt))
+                    heapq.heappush(heap, (nd, rnd(), nxt))
         return False
 
 

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core import kernels_lib as K
 from repro.core.dfg import DFG
-from repro.core.elastic_sim import SimResult, simulate
+from repro.core.elastic_sim import SimResult, TimingTrace, simulate
 from repro.core.executor import execute
 from repro.core.fabric import Fabric
 from repro.core.mapper import Mapping, map_dfg
@@ -95,6 +95,10 @@ class ShotRunner:
         self.tally = Tally()
         self._mappings: Dict[str, Mapping] = {}
         self._sims: Dict[Tuple, SimResult] = {}
+        # timing traces: (cfg key, length, layout, n_banks) -> TimingTrace;
+        # seeded from artifacts, recorded after fresh static-rate sims
+        self._traces: Dict[Tuple, TimingTrace] = {}
+        self._fresh_traces: Dict[Tuple, TimingTrace] = {}
         self._current_kernel: Optional[str] = None
 
     def mapping(self, key: str, g: DFG) -> Mapping:
@@ -120,6 +124,21 @@ class ShotRunner:
         it instead of re-mapping."""
         self._mappings.setdefault(key, m)
 
+    def seed_trace(self, key: str, length: int, layout: Tuple[int, ...],
+                   trace: TimingTrace) -> None:
+        """Pre-register a recorded timing trace (e.g. carried inside a
+        ``CompiledArtifact``) so a static-rate shot replays it instead of
+        re-simulating — the repeat-dispatch path becomes O(length) NumPy."""
+        self._traces.setdefault((key, length, tuple(layout), trace.n_banks),
+                                trace)
+
+    def fresh_traces(self) -> Dict[Tuple, TimingTrace]:
+        """Traces recorded by this runner since the last harvest; the
+        engine persists them back into the owning artifact. Clears the
+        fresh set."""
+        out, self._fresh_traces = self._fresh_traces, {}
+        return out
+
     def run_shot(self, key: str, g: DFG,
                  inputs: Dict[str, np.ndarray],
                  streams_changed: int,
@@ -139,9 +158,25 @@ class ShotRunner:
         (length,) = {v.shape[0] for v in inputs.values()}
         sig = (cfg_key, length, layout)
         if sig not in self._sims:
-            sin, sout = _shot_streams(g, length, layout, self.bus.n_banks)
-            self._sims[sig] = simulate(m, inputs, streams_in=sin,
-                                       streams_out=sout, bus=self.bus)
+            tkey = (cfg_key, length, tuple(layout), self.bus.n_banks)
+            trace = self._traces.get(tkey)
+            if trace is not None and g.is_static_rate():
+                # timing/value decoupling: the cycle schedule of a
+                # static-rate DFG is value-independent, so replay the
+                # recorded trace and take the values from the functional
+                # executor — no simulation on the repeat-dispatch path
+                self._sims[sig] = trace.replay(outs)
+            else:
+                sin, sout = _shot_streams(g, length, layout,
+                                          self.bus.n_banks)
+                sim = simulate(m, inputs, streams_in=sin, streams_out=sout,
+                               bus=self.bus)
+                self._sims[sig] = sim
+                if g.is_static_rate():
+                    trace = TimingTrace.from_sim(sim, length, tuple(layout),
+                                                 self.bus.n_banks)
+                    self._traces[tkey] = trace
+                    self._fresh_traces[tkey] = trace
         sim = self._sims[sig]
         self.tally.exec += sim.cycles
         self.tally.rearm += rearm_cycles(streams_changed, pe_config_words)

@@ -29,6 +29,7 @@ import pickle
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import dfg as D
+from repro.core.elastic_sim import TimingTrace
 from repro.core.mapper import Mapping
 from repro.core.multishot import rearm_cycles
 
@@ -36,7 +37,13 @@ from repro.core.multishot import rearm_cycles
 # change; the version is hashed into cache keys, so old entries miss.
 # v2: Edge.init became Optional (None = recirculation edge of a
 #     data-dependent loop) and the frontend lowers while/fori/scan.
-SCHEMA_VERSION = 2
+# v3: artifacts carry TimingTraces — per (shot key, length, layout, bank
+#     count) cycle schedules recorded once for static-rate shots and
+#     replayed on every later dispatch (timing/value decoupling).
+SCHEMA_VERSION = 3
+
+# key of one recorded trace: (shot/config key, length, layout, n_banks)
+TraceKey = Tuple[str, int, Tuple[int, ...], int]
 
 Geometry = Tuple[int, int, int, int]          # (rows, cols, n_imns, n_omns)
 
@@ -59,6 +66,10 @@ class CompiledArtifact:
     length: Optional[int] = None              # traced kernels fix the length
     element_mode: bool = False                # traced per-element (lax.cond)
     out_shapes: Optional[List[Tuple[int, ...]]] = None
+    # value-independent cycle schedules of static-rate shots, recorded on
+    # first execution and replayed ever after (persisted with the artifact)
+    timing_traces: Dict[TraceKey, TimingTrace] = \
+        dataclasses.field(default_factory=dict)
     schema: int = SCHEMA_VERSION
 
     # -- structure ---------------------------------------------------------

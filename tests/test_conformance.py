@@ -12,8 +12,12 @@ ints, explicit 32-bit wrapping) — deliberately sharing no code with
 ``core.executor``. Each case then asserts bit-exact agreement between
 
   1. the pure-Python reference,
-  2. the functional executor (vectorized / loop / token paths), and
-  3. the cycle-accurate elastic simulator on the placed-and-routed netlist.
+  2. the functional executor (vectorized / loop / token paths),
+  3. the *vectorized* elastic simulator on the placed-and-routed netlist,
+  4. the *reference* simulator (``elastic_sim_ref``, the original
+     token-by-token implementation) — which must agree with the
+     vectorized core not just on outputs but on cycle counts, arrival
+     schedules, FU firing counts, and bank beats (ISSUE 4).
 
 The deterministic corpus below runs everywhere (>= 200 sim-verified cases,
 the ISSUE acceptance bar); the hypothesis properties widen the sweep when
@@ -35,6 +39,7 @@ except ModuleNotFoundError:
 
 from repro.core import dfg as D
 from repro.core.elastic_sim import simulate
+from repro.core.elastic_sim_ref import simulate_reference
 from repro.core.executor import execute
 from repro.core.isa import AluOp, CmpOp
 from repro.core.mapper import MappingError, map_dfg
@@ -366,8 +371,11 @@ def _assert_case(seed: int, length: int, with_sim: bool) -> bool:
         # 2-slot elastic buffers genuinely deadlock on reconvergent paths
         # whose latency skew exceeds the buffering slack (a liveness limit
         # of the microarchitecture, not a semantics bug) — count these like
-        # routing failures, never as conformance passes
+        # routing failures, never as conformance passes. The reference
+        # simulator must agree that the netlist deadlocks.
         if "deadlock" in str(e):
+            with pytest.raises(RuntimeError, match="deadlock"):
+                simulate_reference(m, inputs)
             return False
         raise
     for o, ref in refs.items():
@@ -375,6 +383,21 @@ def _assert_case(seed: int, length: int, with_sim: bool) -> bool:
         assert got == ref, (
             f"seed {seed}: elastic sim vs reference mismatch on {o}: "
             f"{got[:8]} != {ref[:8]} (graph {g.name})")
+    # differential oracle: the vectorized core must reproduce the original
+    # simulator's full timing surface, not just the values
+    ref_sim = simulate_reference(m, inputs)
+    assert sim.cycles == ref_sim.cycles, (
+        f"seed {seed}: cycle count diverged: fast {sim.cycles} != "
+        f"reference {ref_sim.cycles} (graph {g.name})")
+    assert sim.arrival_cycles == ref_sim.arrival_cycles, (
+        f"seed {seed}: arrival schedule diverged (graph {g.name})")
+    assert sim.fu_firings == ref_sim.fu_firings, (
+        f"seed {seed}: FU firing counts diverged (graph {g.name})")
+    assert sim.bank_beats == ref_sim.bank_beats, (
+        f"seed {seed}: bank beats diverged (graph {g.name})")
+    for o in refs:
+        assert sim.outputs[o].tolist() == ref_sim.outputs[o].tolist(), (
+            f"seed {seed}: fast vs reference sim outputs differ on {o}")
     return True
 
 
