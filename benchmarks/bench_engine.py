@@ -19,7 +19,17 @@ the cold compile path is reported separately as ``wall_us_*_cold``.
 
 ``run()`` returns machine-readable rows; ``write_json()`` dumps them as
 ``BENCH_engine.json`` (the perf-trajectory artifact consumed by CI and
-``benchmarks/run.py``). The CLI supports tiny smoke runs::
+``benchmarks/run.py``). By default ``main()`` emits rows for **both
+backends** (ISSUE 5): pallas rows cover every kernel inside the declared
+capability set (engine/capabilities.py) — reductions included — with the
+same request streams as the sim rows, so their cycle columns must match
+exactly (timing/value decoupling) while values are verified bit-exact
+against a sim engine (``values_match_sim``). Pallas rows run in interpret
+mode on CPU (``interpret_mode``), where wall time measures the
+interpreter, not the substrate — consumers (``perf_smoke``) budget only
+the sim rows' wall time and assert value parity on the pallas rows.
+
+The CLI supports tiny smoke runs::
 
     PYTHONPATH=src python -m benchmarks.bench_engine --length 16 --requests 8
 """
@@ -74,25 +84,45 @@ def _median_wall(dispatch: Callable[[], None], repeats: int) -> float:
     return statistics.median(walls)
 
 
+def _pallas_capable(g: DFG, length: int) -> bool:
+    from repro.engine.capabilities import backend_skip_reason
+    return backend_skip_reason(g, length, "pallas") is None
+
+
 def run(length: int = 64, n_requests: int = 16, backend: str = "sim",
-        fabric: Fabric = None, repeats: int = 5) -> List[dict]:
+        fabric: Fabric = None, repeats: int = 5,
+        kernels=None) -> List[dict]:
+    """``kernels``: optional kernel-name subset to execute (e.g.
+    perf_smoke's judged pair). The request streams still draw from the
+    shared rng for every kernel, so a subset run stays stream-identical —
+    and therefore cycle-comparable — with a full run."""
     fabric = fabric or Fabric()
     rng = np.random.default_rng(0)
     rows: List[dict] = []
+    interpret = False
+    if backend == "pallas":
+        from repro.kernels.fabric_reduce import default_interpret
+        interpret = default_interpret()
     for kname, factory in _KERNELS.items():
         g = factory(length)
+        # request streams draw from the shared rng for EVERY kernel, even
+        # skipped ones — stream parity across backends/subsets is what
+        # makes the cycle columns comparable
         reqs = [_inputs(g, length, rng) for _ in range(n_requests)]
+        if kernels is not None and kname not in kernels:
+            continue
+        if backend == "pallas" and not _pallas_capable(g, length):
+            continue            # named skips live in the conformance gate
 
         naive = Engine(fabric=fabric, backend=backend,
                        cache=ArtifactCache(memory_only=True))
         art = naive.compile(g)
 
         def run_naive():
-            for ins in reqs:
-                naive.run(art, dict(ins))
+            return [naive.run(art, dict(ins)) for ins in reqs]
 
         t0 = time.perf_counter()
-        run_naive()                              # warmup + cycle metrics
+        outs_naive = run_naive()                 # warmup + cycle metrics
         t_naive_cold = time.perf_counter() - t0
         cycles_naive = naive.tally.total
         naive_overhead = naive.tally.config + naive.tally.rearm
@@ -103,19 +133,20 @@ def run(length: int = 64, n_requests: int = 16, backend: str = "sim",
         art_b = batched.compile(g)
 
         def run_batched():
-            for ins in reqs:
-                batched.submit(art_b, dict(ins))
+            handles = [batched.submit(art_b, dict(ins)) for ins in reqs]
             batched.flush()
+            return handles
 
         t0 = time.perf_counter()
-        run_batched()                            # warmup + cycle metrics
+        handles = run_batched()                  # warmup + cycle metrics
         t_batched_cold = time.perf_counter() - t0
+        lane_batches_per_flush = batched.stats.lane_batches
         cycles_batched = batched.tally.total
         exec_cycles = batched.tally.exec
         batched_overhead = batched.tally.config + batched.tally.rearm
         t_batched = _median_wall(run_batched, repeats)
 
-        rows.append({
+        row = {
             "kernel": kname,
             "backend": backend,
             "geometry": f"{fabric.rows}x{fabric.cols}",
@@ -134,7 +165,31 @@ def run(length: int = 64, n_requests: int = 16, backend: str = "sim",
             "wall_us_batched": t_batched * 1e6,
             "wall_us_naive_cold": t_naive_cold * 1e6,
             "wall_us_batched_cold": t_batched_cold * 1e6,
-        })
+        }
+        if backend == "pallas":
+            # value parity vs a sim engine over the identical requests —
+            # both the per-request dispatches and the lane-batched flush;
+            # asserted per (request, output, path) so a divergence names
+            # exactly where it happened
+            sim_eng = Engine(fabric=fabric, backend="sim",
+                             cache=ArtifactCache(memory_only=True))
+            sim_art = sim_eng.compile(g)
+            for i, (ins, outs, h) in enumerate(zip(reqs, outs_naive,
+                                                   handles)):
+                want = sim_eng.run(sim_art, dict(ins))
+                for o in want:
+                    for path, got in (("run", outs[o]),
+                                      ("flush", h.result()[o])):
+                        assert np.array_equal(got, want[o]), (
+                            f"{kname}: pallas {path} diverged from sim on "
+                            f"request {i} output {o}: {got!r} != "
+                            f"{want[o]!r}")
+            row["values_match_sim"] = True       # unreachable otherwise
+            row["interpret_mode"] = interpret
+            # per-flush grid count (the engine stat is cumulative across
+            # the warmup + timed repeats)
+            row["lane_batches"] = lane_batches_per_flush
+        rows.append(row)
     return rows
 
 
@@ -147,30 +202,51 @@ def write_json(rows: List[dict], path: str = "BENCH_engine.json") -> str:
 
 def main(length: int = 64, n_requests: int = 16, json_path: str = "",
          geometries: Tuple[Tuple[int, int], ...] = ((4, 4),),
-         repeats: int = 5, backend: str = "sim") -> List[dict]:
+         repeats: int = 5,
+         backends: Tuple[str, ...] = ("sim", "pallas")) -> List[dict]:
     rows: List[dict] = []
     for (r_, c_) in geometries:
-        geo_rows = run(length=length, n_requests=n_requests, backend=backend,
-                       fabric=Fabric(rows=r_, cols=c_), repeats=repeats)
-        print(f"  {r_}x{c_} fabric (cycles are the primary metric; wall = "
-              f"median of {repeats} warm repeats)")
-        print(f"  {'kernel':10s} {'II':>5s} {'cyc(naive)':>11s} "
-              f"{'cyc(batch)':>11s} {'saved':>7s} {'wall_ms(n)':>10s} "
-              f"{'wall_ms(b)':>10s}")
-        for r in geo_rows:
-            print(f"  {r['kernel']:10s} {r['ii']:5.2f} "
-                  f"{r['cycles_naive']:11d} {r['cycles_batched']:11d} "
-                  f"{r['rearm_cycles_saved']:7d} "
-                  f"{r['wall_us_naive'] / 1e3:10.2f} "
-                  f"{r['wall_us_batched'] / 1e3:10.2f}")
-            # multi-shot plans alternate fabric configs internally, so
-            # back-to-back requests legitimately save nothing
-            if r["n_shots"] == 1:
-                assert r["rearm_cycles_saved"] > 0, (
-                    f"{r['kernel']}: batching saved no overhead cycles")
-            else:
-                assert r["rearm_cycles_saved"] >= 0, r
-        rows.extend(geo_rows)
+        for backend in backends:
+            geo_rows = run(length=length, n_requests=n_requests,
+                           backend=backend, fabric=Fabric(rows=r_, cols=c_),
+                           repeats=repeats)
+            note = " [interpret mode: values verified vs sim, wall time " \
+                   "measures the interpreter]" if backend == "pallas" else ""
+            print(f"  {r_}x{c_} fabric, backend={backend}{note} (cycles are "
+                  f"the primary metric; wall = median of {repeats} warm "
+                  f"repeats)")
+            print(f"  {'kernel':10s} {'II':>5s} {'cyc(naive)':>11s} "
+                  f"{'cyc(batch)':>11s} {'saved':>7s} {'wall_ms(n)':>10s} "
+                  f"{'wall_ms(b)':>10s}")
+            for r in geo_rows:
+                print(f"  {r['kernel']:10s} {r['ii']:5.2f} "
+                      f"{r['cycles_naive']:11d} {r['cycles_batched']:11d} "
+                      f"{r['rearm_cycles_saved']:7d} "
+                      f"{r['wall_us_naive'] / 1e3:10.2f} "
+                      f"{r['wall_us_batched'] / 1e3:10.2f}")
+                # multi-shot plans alternate fabric configs internally, so
+                # back-to-back requests legitimately save nothing
+                if r["n_shots"] == 1:
+                    assert r["rearm_cycles_saved"] > 0, (
+                        f"{r['kernel']}: batching saved no overhead cycles")
+                else:
+                    assert r["rearm_cycles_saved"] >= 0, r
+            rows.extend(geo_rows)
+        # cycle columns are backend-independent (timing/value decoupling):
+        # every pallas row must match its sim row exactly
+        sim_by_kernel = {r["kernel"]: r for r in rows
+                         if r["backend"] == "sim"
+                         and r["geometry"] == f"{r_}x{c_}"}
+        for r in rows:
+            if r["backend"] != "pallas" or r["geometry"] != f"{r_}x{c_}":
+                continue
+            s = sim_by_kernel.get(r["kernel"])
+            if s is None:
+                continue
+            for field in ("cycles_naive", "cycles_batched", "exec_cycles"):
+                assert r[field] == s[field], (
+                    f"{r['kernel']}: pallas {field} {r[field]} != sim "
+                    f"{s[field]}")
     if json_path:
         print(f"  wrote {write_json(rows, json_path)}")
     return rows
@@ -188,8 +264,10 @@ if __name__ == "__main__":
     ap.add_argument("--geometry", action="append", default=None,
                     metavar="RxC", help="fabric geometry to sweep "
                     "(repeatable; default 4x4)")
-    ap.add_argument("--backend", default="sim", choices=("sim", "pallas"),
-                    help="execution backend for the dispatch rows")
+    ap.add_argument("--backend", action="append", default=None,
+                    choices=("sim", "pallas"),
+                    help="execution backend for the dispatch rows "
+                         "(repeatable; default: both)")
     ap.add_argument("--json", default="BENCH_engine.json",
                     help="output path ('' disables)")
     args = ap.parse_args()
@@ -197,4 +275,4 @@ if __name__ == "__main__":
                  for s in (args.geometry or ["4x4"]))
     main(length=args.length, n_requests=args.requests,
          json_path=args.json, geometries=geos, repeats=args.repeats,
-         backend=args.backend)
+         backends=tuple(args.backend or ("sim", "pallas")))

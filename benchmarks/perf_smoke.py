@@ -9,6 +9,12 @@ against the checked-in ``benchmarks/perf_baseline.json``. The budget is
 machine variance, tight enough that losing the trace cache or the
 vectorized executor (both ~5-10x) fails the build.
 
+Pallas rows (ISSUE 5) are judged differently: in interpret mode wall time
+measures the Pallas interpreter, not the substrate, so **no wall-clock
+budget applies** — instead every pallas row must assert bit-exact value
+parity against the sim backend (``values_match_sim``) and identical cycle
+columns (timing/value decoupling).
+
     PYTHONPATH=src python -m benchmarks.perf_smoke
 """
 from __future__ import annotations
@@ -23,6 +29,8 @@ from benchmarks import bench_engine
 BASELINE_PATH = os.path.join(os.path.dirname(__file__),
                              "perf_baseline.json")
 SMOKE_KERNELS = ("fft", "div_loop")
+# pallas parity subset: one streaming kernel, one reduction kernel
+PALLAS_SMOKE_KERNELS = ("fft", "mac1")
 
 
 def calibrate() -> float:
@@ -53,10 +61,11 @@ def main(factor: float = 2.0, baseline_path: str = BASELINE_PATH) -> int:
         scale = max(1.0, calibrate() / baseline["calib_us"])
     # run the full kernel set (the request streams draw from one shared
     # seeded rng, so subsetting would shift the data-dependent cycle
-    # counts) and judge only the two smoke kernels
-    rows = [r for r in bench_engine.run(length=baseline["length"],
-                                        n_requests=baseline["requests"])
-            if r["kernel"] in SMOKE_KERNELS]
+    # counts); wall budgets judge only the two smoke kernels, but all sim
+    # rows stay around for the pallas cycle-identity comparison below
+    rows_sim = bench_engine.run(length=baseline["length"],
+                                n_requests=baseline["requests"])
+    rows = [r for r in rows_sim if r["kernel"] in SMOKE_KERNELS]
     assert {r["kernel"] for r in rows} == set(SMOKE_KERNELS), (
         f"perf smoke kernels missing from bench rows: got "
         f"{[r['kernel'] for r in rows]}, want {SMOKE_KERNELS}")
@@ -79,6 +88,44 @@ def main(factor: float = 2.0, baseline_path: str = BASELINE_PATH) -> int:
                 print(f"  {r['kernel']:10s} {field:16s} {r[field]} != "
                       f"baseline {base[field]} CYCLES DRIFTED")
                 failures.append((r["kernel"], field, r[field], base[field]))
+
+    # pallas rows: no wall budget in interpret mode; value parity and
+    # cycle identity with the sim rows measured in this same process (all
+    # three cycle columns) are mandatory. Judged on a two-kernel subset —
+    # one streaming (fft), one reduction (mac1) — because interpret-mode
+    # dispatch is slow and the full pallas sweep already runs (and
+    # asserts parity) in the bench_engine CI step; the subset stays
+    # stream-identical to the sim rows via run(kernels=...)
+    try:
+        rows_p = bench_engine.run(length=baseline["length"],
+                                  n_requests=baseline["requests"],
+                                  backend="pallas", repeats=1,
+                                  kernels=PALLAS_SMOKE_KERNELS)
+    except AssertionError as e:       # run() asserts parity per request
+        rows_p = []
+        print(f"  pallas value parity FAILED: {e}")
+        failures.append(("pallas", "values_match_sim", str(e)[:120], True))
+    sim_by_kernel = {r["kernel"]: r for r in rows_sim}
+    print(f"  pallas rows (interpret mode: value parity + cycle identity "
+          f"vs sim judged, wall budgets skipped)")
+    for r in rows_p:
+        ok = r.get("values_match_sim") is True
+        print(f"  {r['kernel']:10s} values_match_sim={ok} "
+              f"cycles_naive={r['cycles_naive']}")
+        if not ok:
+            failures.append((r["kernel"], "values_match_sim", False, True))
+        s = sim_by_kernel[r["kernel"]]
+        for field in ("cycles_naive", "cycles_batched", "exec_cycles"):
+            if r[field] != s[field]:
+                print(f"  {r['kernel']:10s} pallas {field} {r[field]} != "
+                      f"sim {s[field]} CYCLES DIVERGED")
+                failures.append((r["kernel"], f"pallas_{field}",
+                                 r[field], s[field]))
+    if {r["kernel"] for r in rows_p} != set(PALLAS_SMOKE_KERNELS):
+        failures.append(("pallas", "rows",
+                         sorted(r["kernel"] for r in rows_p),
+                         PALLAS_SMOKE_KERNELS))
+
     if failures:
         print(f"  PERF SMOKE FAILED: {failures}")
         return 1

@@ -4,8 +4,9 @@ for Embedded Systems' (Vázquez et al., 2024) + its TPU-scale adaptation.
 Layers:
   repro.core      — the paper (DFG IR, mapper, elastic cycle sim, multi-shot
                     planner, SoC/CPU/power models)
-  repro.kernels   — Pallas TPU kernels (fabric_stream, stream_matmul,
-                    stream_conv2d, flash_attention) + jnp oracles
+  repro.kernels   — Pallas TPU kernels (fabric_stream, fabric_reduce,
+                    stream_matmul, stream_conv2d, flash_attention) + jnp
+                    oracles
   repro.models    — the 10 assigned architectures (dense/MoE/SSM/hybrid/
                     VLM/enc-dec), scan-over-layers, bf16
   repro.configs   — exact assigned configs + reduced smoke variants + shapes

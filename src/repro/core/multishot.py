@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -84,14 +84,23 @@ class ShotRunner:
     every mapping the runner performs itself; pre-seeded mappings keep the
     geometry they were produced with. ``bus`` sets the interleaved-bank
     count used for shot stream layouts.
+
+    ``value_fn`` selects the *value substrate*: the callable producing a
+    shot's numeric outputs (default: the functional executor). The pallas
+    backend passes its fused-kernel dispatcher here, so multi-shot plans
+    chain per-shot pallas kernels through the same IMN/OMN buffer handoff
+    — while cycle accounting keeps flowing through the memoized timing
+    simulation (PR 4's timing/value decoupling, now across backends).
     """
 
     def __init__(self, with_timing: bool = True,
                  fabric: Optional[Fabric] = None,
-                 bus: Optional[BusConfig] = None):
+                 bus: Optional[BusConfig] = None,
+                 value_fn: Optional[Callable] = None):
         self.with_timing = with_timing
         self.fabric = fabric or Fabric()
         self.bus = bus or BusConfig()
+        self.value_fn = value_fn or execute
         self.tally = Tally()
         self._mappings: Dict[str, Mapping] = {}
         self._sims: Dict[Tuple, SimResult] = {}
@@ -144,10 +153,17 @@ class ShotRunner:
                  streams_changed: int,
                  pe_config_words: int = 0,
                  layout: Tuple[int, ...] = (),
-                 config_class: Optional[str] = None) -> Dict[str, np.ndarray]:
+                 config_class: Optional[str] = None,
+                 outs: Optional[Dict[str, np.ndarray]] = None
+                 ) -> Dict[str, np.ndarray]:
         """config_class: kernels sharing a configuration family (e.g. gemver
-        rows differ only in folded constants) avoid full config re-fetch."""
-        outs = execute(g, inputs)
+        rows differ only in folded constants) avoid full config re-fetch.
+
+        ``outs``: pre-computed shot values (e.g. one lane of a batched
+        pallas grid) — cycle accounting still runs, value computation is
+        skipped."""
+        if outs is None:
+            outs = self.value_fn(g, inputs)
         if not self.with_timing:
             return outs
         cfg_key = config_class or key

@@ -22,11 +22,14 @@ One pipeline for every way this code base runs a kernel::
 from repro.engine.artifact import (ArtifactError, CompiledArtifact,
                                    estimate_ii)
 from repro.engine.cache import ArtifactCache, default_cache
+from repro.engine.capabilities import (CAPS, CapabilityError, check_backend,
+                                       dfg_features, plan_features)
 from repro.engine.compiler import compile, geometry_of
 from repro.engine.scheduler import Engine, EngineStats, Handle
 
 __all__ = [
-    "ArtifactCache", "ArtifactError", "CompiledArtifact", "Engine",
-    "EngineStats", "Handle", "compile", "default_cache", "estimate_ii",
-    "geometry_of",
+    "ArtifactCache", "ArtifactError", "CAPS", "CapabilityError",
+    "CompiledArtifact", "Engine", "EngineStats", "Handle", "check_backend",
+    "compile", "default_cache", "dfg_features", "estimate_ii",
+    "geometry_of", "plan_features",
 ]

@@ -40,7 +40,11 @@ from repro.core.multishot import rearm_cycles
 # v3: artifacts carry TimingTraces — per (shot key, length, layout, bank
 #     count) cycle schedules recorded once for static-rate shots and
 #     replayed on every later dispatch (timing/value decoupling).
-SCHEMA_VERSION = 3
+# v4: artifacts carry their required capability feature set (``features``,
+#     see engine/capabilities.py) so every dispatch layer validates against
+#     the declared per-backend capability matrix instead of ad-hoc
+#     ``backend == "pallas"`` special cases.
+SCHEMA_VERSION = 4
 
 # key of one recorded trace: (shot/config key, length, layout, n_banks)
 TraceKey = Tuple[str, int, Tuple[int, ...], int]
@@ -70,6 +74,9 @@ class CompiledArtifact:
     # first execution and replayed ever after (persisted with the artifact)
     timing_traces: Dict[TraceKey, TimingTrace] = \
         dataclasses.field(default_factory=dict)
+    # capability features this kernel requires of its execution substrate
+    # (sorted flags from engine/capabilities.py, computed at compile time)
+    features: Tuple[str, ...] = ()
     schema: int = SCHEMA_VERSION
 
     # -- structure ---------------------------------------------------------

@@ -102,10 +102,22 @@ def build_artifact(g: D.DFG, key: str, fabric: Fabric, backend: str,
                    out_shapes: Optional[List[Tuple[int, ...]]] = None,
                    restarts: int = 200,
                    pe_limit: Optional[int] = None) -> CompiledArtifact:
-    """Partition + place & route + config-word emission (no cache I/O)."""
+    """Partition + place & route + config-word emission (no cache I/O).
+
+    The plan's required capability features are computed here and checked
+    against the target backend's declared capability set — a kernel that
+    exceeds it fails *at compile time* with a diagnostic naming every
+    offending feature (engine/capabilities.py), not at first dispatch.
+    """
+    from repro.engine import capabilities
     from repro.frontend import partition
     pl = partition.plan(g, fabric, restarts=restarts, pe_limit=pe_limit)
     name = name or g.name
+    features = capabilities.plan_features(pl)
+    capabilities.check_backend(features, backend, name)
+    if backend == "pallas" and length is not None:
+        for shot in pl.shots:
+            capabilities.check_stream_length(shot.dfg, length, backend)
     config_class = f"{name}:{key[:10]}"
     words: Dict[str, List[int]] = {}
     for i, shot in enumerate(pl.shots):
@@ -117,7 +129,8 @@ def build_artifact(g: D.DFG, key: str, fabric: Fabric, backend: str,
     return CompiledArtifact(
         name=name, key=key, backend=backend, geometry=geometry_of(fabric),
         plan=pl, config_words=words, config_class=config_class,
-        length=length, element_mode=element_mode, out_shapes=out_shapes)
+        length=length, element_mode=element_mode, out_shapes=out_shapes,
+        features=tuple(sorted(features)))
 
 
 def compile(fn_or_dfg: Union[Callable, D.DFG], length: Optional[int] = None,

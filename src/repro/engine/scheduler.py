@@ -18,6 +18,22 @@ at the request level:
     requests are independent by contract (data-dependent phases flush
     between submissions).
 
+Backends differ only in their *value substrate* (``ShotRunner.value_fn``):
+``sim`` computes values with the functional executor, ``pallas`` with the
+fused streaming/reduction kernels (``kernels/fabric_reduce.run_dfg``).
+Cycle accounting is identical — the timing simulation is value-independent
+for static-rate shots (PR 4) and memoized per config class, so the pallas
+path reports the same measured cycles as sim. Eligibility is declared, not
+special-cased: every artifact carries its required capability features and
+``Engine`` validates them against the backend's capability set
+(``engine/capabilities.py``), raising diagnostics that name the offending
+feature.
+
+On the pallas backend, ``flush()`` additionally coalesces consecutive
+same-artifact single-shot requests into one **lane-batched** padded Pallas
+grid (``run_dfg_lanes``, mirroring the simulator's ``simulate_lanes``): a
+config-class batch costs one kernel launch instead of N.
+
 All cycle accounting lands in the shared ``ShotRunner`` tally;
 ``EngineStats`` additionally tracks what the same requests would have cost
 one-by-one, so the batching savings are directly observable.
@@ -31,9 +47,17 @@ import numpy as np
 
 from repro.core.fabric import Fabric
 from repro.core.multishot import ShotRunner, Tally
+from repro.engine import capabilities
 from repro.engine.artifact import ArtifactError, CompiledArtifact
 from repro.engine.cache import ArtifactCache, default_cache
 from repro.engine import compiler
+
+
+def _pallas_value_fn(g, inputs):
+    """Value substrate of the pallas backend (lazy import: jax + the
+    Pallas kernels only load when a pallas engine actually dispatches)."""
+    from repro.kernels.fabric_reduce import run_dfg
+    return run_dfg(g, inputs)
 
 
 @dataclasses.dataclass
@@ -44,6 +68,9 @@ class EngineStats:
     flushes: int = 0
     config_cycles_paid: int = 0       # what the batched schedule charged
     config_cycles_naive: int = 0      # what one-by-one dispatch would charge
+    lane_batches: int = 0             # pallas grids serving > 1 request
+    lane_requests: int = 0            # requests served inside those grids
+    lane_batch_failures: int = 0      # grids that fell back to per-request
 
     @property
     def config_cycles_saved(self) -> int:
@@ -87,9 +114,9 @@ class Engine:
                  with_timing: bool = True,
                  runner: Optional[ShotRunner] = None,
                  cache: Optional[ArtifactCache] = None):
-        if backend not in ("sim", "pallas"):
-            raise ValueError(f"backend must be 'sim' or 'pallas', got "
-                             f"{backend!r}")
+        if backend not in capabilities.CAPS:
+            raise ValueError(f"backend must be one of "
+                             f"{capabilities.BACKENDS}, got {backend!r}")
         if runner is not None:
             self.runner = runner
             self.fabric = runner.fabric if fabric is None else fabric
@@ -97,6 +124,11 @@ class Engine:
             self.fabric = fabric or Fabric()
             self.runner = ShotRunner(with_timing=with_timing,
                                      fabric=self.fabric)
+        # engine-resolved value substrate, bound to the runner only for
+        # the duration of each dispatch (a ShotRunner may be shared by
+        # engines of different backends — never mutate it permanently)
+        from repro.core.executor import execute
+        self._value_fn = _pallas_value_fn if backend == "pallas" else execute
         self.backend = backend
         self.cache = cache if cache is not None else default_cache()
         self.stats = EngineStats()
@@ -116,8 +148,31 @@ class Engine:
                streams_changed: Optional[int] = None,
                layout: Tuple[int, ...] = (),
                pe_config_words: int = 0) -> Handle:
-        """Queue one request; execution happens at the next ``flush()``."""
+        """Queue one request; execution happens at the next ``flush()``.
+
+        All capability validation happens HERE, where the stream length is
+        first known — a request that cannot run on this backend must fail
+        at submit (queue untouched), never mid-flush."""
         self._check(artifact)
+        missing = [n for n in artifact.dfg.inputs if n not in inputs]
+        if missing:
+            raise ValueError(f"{artifact.name}: missing input stream(s) "
+                             f"{missing}")
+        if inputs:
+            lengths = {int(np.asarray(v).shape[0]) for v in inputs.values()}
+            if len(lengths) != 1:
+                raise ValueError(
+                    f"{artifact.name}: all input streams must share a "
+                    f"length, got {sorted(lengths)}")
+            if self.backend != "sim":
+                # every shot of a plan executes at the request length:
+                # partition cuts only at rate-1 signals, so a reduction's
+                # shortened emission stream can never cross a shot
+                # boundary (it drains to a final OUTPUT within its shot)
+                (length,) = lengths
+                for shot in artifact.plan.shots:
+                    capabilities.check_stream_length(shot.dfg, length,
+                                                     self.backend)
         if streams_changed is None:
             g = artifact.dfg
             streams_changed = len(g.inputs) + len(g.outputs)
@@ -126,7 +181,13 @@ class Engine:
         return h
 
     def flush(self) -> List[Handle]:
-        """Execute all queued requests, batched by config class."""
+        """Execute all queued requests, batched by config class.
+
+        On the pallas backend, consecutive same-artifact single-shot
+        requests with equal stream lengths additionally dispatch as one
+        lane-batched padded Pallas grid; cycle accounting still runs
+        per-request through the runner (each lane occupies the model
+        fabric for its own shot)."""
         if not self._queue:
             return []
         queue, self._queue = self._queue, []
@@ -136,8 +197,53 @@ class Engine:
         for h in queue:
             class_rank.setdefault(h.artifact.config_class, len(class_rank))
         queue.sort(key=lambda h: class_rank[h.artifact.config_class])
-        for h in queue:
-            self._execute(h)
+        current: List[Handle] = []       # the unit a raise would poison
+        try:
+            i = 0
+            while i < len(queue):
+                batch = [queue[i]]
+                if self.backend == "pallas" and \
+                        queue[i].artifact.n_shots == 1:
+                    la = self._lane_lengths(queue[i])
+                    j = i + 1
+                    while j < len(queue) and \
+                            self._lane_compatible(queue[i], queue[j], la):
+                        batch.append(queue[j])
+                        j += 1
+                outs_list = None
+                if len(batch) > 1:
+                    current = batch
+                    try:
+                        outs_list = self._run_lanes(batch)
+                    except Exception:
+                        # the grid fails as a unit with no way to tell
+                        # which lane is at fault: fall back to
+                        # per-request dispatch so only the actually-bad
+                        # request is affected — counted, so a systematic
+                        # grid regression (batching silently lost) is
+                        # observable in the stats
+                        self.stats.lane_batch_failures += 1
+                        outs_list = None
+                if outs_list is not None:
+                    self.stats.lane_batches += 1
+                    self.stats.lane_requests += len(batch)
+                    for h, outs in zip(batch, outs_list):
+                        current = [h]
+                        self._execute(h, outs=outs)
+                else:
+                    for h in batch:
+                        current = [h]
+                        self._execute(h)
+                i += len(batch)
+        except Exception:
+            # never strand accepted requests — but never retry the unit
+            # that raised either (re-queuing the poisoned request would
+            # wedge every flush behind it forever)
+            poisoned = {id(h) for h in current}
+            self._queue = [h for h in queue
+                           if not h._done and id(h) not in poisoned] \
+                + self._queue
+            raise
         self.stats.flushes += 1
         return queue
 
@@ -161,33 +267,54 @@ class Engine:
             raise ArtifactError(
                 f"{artifact.name}: artifact compiled for geometry "
                 f"{artifact.geometry}, engine fabric is {geo}")
+        # declared capability gate: diagnostics name the offending features
+        capabilities.check_backend(artifact.features, self.backend,
+                                   artifact.name)
 
-    def _execute(self, h: Handle) -> None:
+    @staticmethod
+    def _lane_lengths(h: Handle) -> set:
+        return {np.asarray(v).shape[0] for v in h.inputs.values()}
+
+    def _lane_compatible(self, a: Handle, b: Handle, la: set) -> bool:
+        """Can ``b`` ride the same lane-batched grid as the batch head
+        ``a`` (whose length set ``la`` the caller computed once)?"""
+        if b.artifact.key != a.artifact.key or b.artifact.n_shots != 1:
+            return False
+        return self._lane_lengths(b) == la
+
+    def _run_lanes(self, batch: List[Handle]) -> List[Dict[str, np.ndarray]]:
+        """One padded Pallas grid for N same-artifact requests."""
+        from repro.kernels.fabric_reduce import run_dfg_lanes
+        g = batch[0].artifact.plan.shots[0].dfg
+        ins = [{k: np.asarray(h.inputs[k], dtype=np.int32)
+                for k in g.inputs} for h in batch]
+        return run_dfg_lanes(g, ins)
+
+    def _execute(self, h: Handle,
+                 outs: Optional[Dict[str, np.ndarray]] = None) -> None:
         art = h.artifact
         before = self.runner.tally.config
-        if art.backend == "pallas":
-            # no cycle-accurate configuration model on this path: contribute
-            # to neither paid nor naive, so stats never report savings that
-            # batching didn't produce
-            h._outputs = self._run_pallas(art, h.inputs)
-            h._done = True
-            self.stats.requests += 1
-            return
         self.stats.config_cycles_naive += art.config_cycles()
         for shot in art.plan.shots:
             self.runner.seed_mapping(shot.key, shot.mapping)
         for (key, length, layout, n_banks), tr in art.timing_traces.items():
             self.runner.seed_trace(key, length, layout, tr)
-        if art.n_shots == 1:
-            shot = art.plan.shots[0]
-            ins = {iname: np.asarray(h.inputs[iname], dtype=np.int32)
-                   for iname, _ in shot.inputs}
-            h._outputs = self.runner.run_shot(
-                shot.key, shot.dfg, ins, streams_changed=h.streams_changed,
-                pe_config_words=h.pe_config_words, layout=h.layout,
-                config_class=art.config_class)
-        else:
-            h._outputs = art.plan.run(h.inputs, runner=self.runner)
+        prev_value_fn = self.runner.value_fn
+        self.runner.value_fn = self._value_fn
+        try:
+            if art.n_shots == 1:
+                shot = art.plan.shots[0]
+                ins = {iname: np.asarray(h.inputs[iname], dtype=np.int32)
+                       for iname, _ in shot.inputs}
+                h._outputs = self.runner.run_shot(
+                    shot.key, shot.dfg, ins,
+                    streams_changed=h.streams_changed,
+                    pe_config_words=h.pe_config_words, layout=h.layout,
+                    config_class=art.config_class, outs=outs)
+            else:
+                h._outputs = art.plan.run(h.inputs, runner=self.runner)
+        finally:
+            self.runner.value_fn = prev_value_fn
         h._done = True
         self.stats.requests += 1
         self.stats.config_cycles_paid += self.runner.tally.config - before
@@ -209,19 +336,6 @@ class Engine:
                 added = True
         if added:
             self.cache.put(art)
-
-    def _run_pallas(self, art: CompiledArtifact,
-                    inputs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
-        g = art.dfg
-        if art.n_shots != 1 or g.back_edges() or \
-                any(n.is_reduction() for n in g.nodes.values()):
-            raise ArtifactError(
-                f"{art.name}: the pallas backend handles single-shot "
-                f"acyclic non-reduction DFGs; use backend='sim'")
-        import jax.numpy as jnp
-        from repro.kernels.fabric_stream import fabric_stream
-        jin = {k: jnp.asarray(v) for k, v in inputs.items()}
-        return {k: np.asarray(v) for k, v in fabric_stream(g, jin).items()}
 
     # -- observability -----------------------------------------------------
     @property

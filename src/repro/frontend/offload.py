@@ -16,12 +16,20 @@ dispatch:
   * ``backend="sim"`` (default) — the cycle-accurate ``elastic_sim``:
     numeric results straight off the simulated OMNs, II / cycle / op counts
     on ``kernel.last`` for perf work;
-  * ``backend="pallas"`` — the fused ``fabric_stream`` Pallas kernel
-    (throughput path; acyclic non-reduction graphs only). No cycle-accurate
-    measurement exists on this path, so ``kernel.last.cycles`` reports the
-    engine's model estimate (config + re-arm + mapped II x length);
-  * multi-shot plans always run through ``ShotRunner`` (config + re-arm
-    cycle accounting on ``kernel.last.tally``).
+  * ``backend="pallas"`` — the fused Pallas kernels (throughput path):
+    ``fabric_stream``-style streaming for elementwise/conditional graphs
+    and ``fabric_reduce`` carry-state kernels for accumulator reductions.
+    Eligibility is *feature detection* against the declared capability set
+    (``engine/capabilities.py``): a kernel outside it (loop-carried state,
+    recirculating while-loops, segmented reductions) fails at compile time
+    with a diagnostic naming the offending feature. Single-shot pallas
+    dispatch has no cycle-accurate measurement, so ``kernel.last.cycles``
+    reports the engine's model estimate (config + re-arm + mapped II x
+    length);
+  * multi-shot plans run through ``ShotRunner`` (config + re-arm cycle
+    accounting on ``kernel.last.tally``) — on the pallas backend the
+    runner's *value substrate* is the fused kernel dispatcher, chaining
+    per-shot pallas kernels through the IMN/OMN buffer handoff.
 
 Compilation goes through the execution engine (``repro.engine``): the
 result is a ``CompiledArtifact`` in the *persistent* artifact cache, keyed
@@ -199,9 +207,13 @@ class OffloadedFunction:
         if ck.plan.n_shots == 1:
             outs, info = self._run_single(ck, inputs)
         else:
-            runner = ShotRunner(with_timing=True, fabric=self.fabric)
+            value_fn = None
+            if self.backend == "pallas":
+                from repro.kernels.fabric_reduce import run_dfg as value_fn
+            runner = ShotRunner(with_timing=True, fabric=self.fabric,
+                                value_fn=value_fn)
             outs = ck.plan.run(inputs, runner=runner)
-            info = RunInfo("sim", ck.plan.n_shots, tally=runner.tally)
+            info = RunInfo(self.backend, ck.plan.n_shots, tally=runner.tally)
         self.last = info
         result = self._pack(ck, outs)
         if self.debug:
@@ -211,16 +223,11 @@ class OffloadedFunction:
     def _run_single(self, ck: CompiledKernel, inputs):
         g = ck.dfg
         if self.backend == "pallas":
-            if g.back_edges() or any(n.is_reduction()
-                                     for n in g.nodes.values()):
-                raise FrontendError(
-                    f"{self.name}: the pallas backend handles acyclic "
-                    f"non-reduction DFGs (see kernels/fabric_stream.py); "
-                    f"use backend='sim'")
-            import jax.numpy as jnp
-            from repro.kernels.fabric_stream import fabric_stream
-            jin = {k: jnp.asarray(v) for k, v in inputs.items()}
-            outs = {k: np.asarray(v) for k, v in fabric_stream(g, jin).items()}
+            # capability features were validated at compile time
+            # (engine/capabilities.py, named diagnostics); dispatch goes to
+            # the fused streaming/reduction kernels
+            from repro.kernels.fabric_reduce import run_dfg
+            outs = run_dfg(g, inputs)
             est = ck.artifact.model_cycles(ck.length)
             return outs, RunInfo("pallas", 1, est_cycles=est)
         sim = simulate(ck.mapping, inputs)

@@ -1,0 +1,237 @@
+"""fabric_reduce — reductions and lane-batched streams as fused Pallas
+kernels, plus ``run_dfg``: the capability-gated DFG dispatcher the engine's
+pallas backend calls.
+
+Extends the one-shot streaming adaptation (``fabric_stream``, DESIGN.md §2)
+to the two kernel classes that previously fell back to the simulator:
+
+  * **accumulator reductions** (running-sum trees from the frontend's
+    ``patterns.py``, mac1/mac3/mac2x dot products): the DFG's elementwise
+    prologue evaluates on (block_rows, 128) VMEM tiles exactly as in
+    ``fabric_stream``; each reduction node then tile-reduces its operand
+    (associative ops only — the capability matrix keeps SHL/SHR
+    accumulators on the sequential simulator) and folds the partial into a
+    **carry block** that persists across sequential grid steps — the TPU
+    image of the PE's immediate-feedback accumulator register. Padding
+    lanes are masked to the op's identity element, and the single emission
+    (``emit_every`` 0 or the stream length) lands in a (1, 1) output block.
+
+  * **lane batching** (mirroring PR 4's ``simulate_lanes``): N same-mapping
+    requests stack lane-major into one padded grid — lane k owns grid steps
+    [k*bpl, (k+1)*bpl) — and carries reset at lane boundaries, so one
+    ``pallas_call`` serves a whole config-class batch from
+    ``Engine.submit``/``flush``.
+
+Everything runs under ``interpret=True`` on CPU (the hermetic CI
+configuration); on a TPU the same lowering compiles via Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import dfg as D
+from repro.core.isa import AluOp
+from repro.engine.capabilities import (CapabilityError, check_backend,
+                                       check_stream_length, dfg_features)
+from repro.kernels import ref
+from repro.kernels.fabric_stream import LANES
+
+I32 = np.int32
+
+# identity element per associative reduction op (padding lanes fold to it)
+_IDENTITY = {AluOp.ADD: 0, AluOp.SUB: 0, AluOp.XOR: 0, AluOp.OR: 0,
+             AluOp.AND: -1, AluOp.MUL: 1}
+
+
+def default_interpret() -> bool:
+    """The kernels' interpret-mode policy (single source of truth — the
+    benchmarks record this in their rows): interpret off the accelerator,
+    compile via Mosaic on a TPU."""
+    return jax.default_backend() == "cpu"
+
+
+def _tile_reduce(op: AluOp, x: jax.Array) -> jax.Array:
+    """Reduce one masked tile to a scalar partial (int32, wrapping)."""
+    if op in (AluOp.ADD, AluOp.SUB):
+        return jnp.sum(x, dtype=jnp.int32)
+    if op == AluOp.MUL:
+        return jnp.prod(x, dtype=jnp.int32)
+    fn = {AluOp.AND: jnp.bitwise_and, AluOp.OR: jnp.bitwise_or,
+          AluOp.XOR: jnp.bitwise_xor}[op]
+    return jax.lax.reduce(x, jnp.int32(_IDENTITY[op]),
+                          lambda a, b: fn(a, b), tuple(range(x.ndim)))
+
+
+def _combine(op: AluOp, carry: jax.Array, part: jax.Array) -> jax.Array:
+    """Fold a tile partial into the running carry (associativity lets the
+    tile order stand in for the element order)."""
+    if op == AluOp.ADD:
+        return carry + part
+    if op == AluOp.SUB:
+        return carry - part        # acc - x0 - x1 - ... = acc - sum(x)
+    if op == AluOp.MUL:
+        return carry * part
+    fn = {AluOp.AND: jnp.bitwise_and, AluOp.OR: jnp.bitwise_or,
+          AluOp.XOR: jnp.bitwise_xor}[op]
+    return fn(carry, part)
+
+
+def _emit_body(g: D.DFG, in_names: List[str], full_names: List[str],
+               red_names: List[str], bpl: int, length: int,
+               block_rows: int):
+    """Kernel body: elementwise prologue on the tile, reduction carries
+    across grid steps, carry reset at lane boundaries."""
+
+    def body(*refs):
+        ins = refs[:len(in_names)]
+        full_refs = refs[len(in_names):len(in_names) + len(full_names)]
+        red_refs = refs[len(in_names) + len(full_names):]
+        arrays = {name: r[...] for name, r in zip(in_names, ins)}
+        stream_outs, red_ins, _ = ref.eval_dfg_streams(g, arrays)
+        for name, r in zip(full_names, full_refs):
+            r[...] = stream_outs[name].astype(r.dtype)
+        if not red_names:
+            return
+        i = pl.program_id(0)
+        j = jax.lax.rem(i, bpl)            # tile index within this lane
+        row = jax.lax.broadcasted_iota(jnp.int32, (block_rows, LANES), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (block_rows, LANES), 1)
+        idx = j * (block_rows * LANES) + row * LANES + col
+        valid = idx < length               # mask the per-lane padding tail
+        for rname, rref in zip(red_names, red_refs):
+            node = g.nodes[rname]
+            x = jnp.where(valid, red_ins[rname], _IDENTITY[node.op])
+            part = _tile_reduce(node.op, x)
+
+            @pl.when(j == 0)
+            def _(rref=rref, node=node):   # new lane: reset the carry
+                rref[0, 0] = jnp.int32(node.acc_init)
+
+            rref[0, 0] = _combine(node.op, rref[0, 0], part)
+
+    return body
+
+
+def fabric_reduce_lanes(g: D.DFG, inputs_list: List[Dict[str, np.ndarray]],
+                        block_rows: int = 8,
+                        interpret: Optional[bool] = None
+                        ) -> List[Dict[str, np.ndarray]]:
+    """Run N same-DFG requests as one lane-batched fused Pallas kernel.
+
+    Handles elementwise chains, select-reducible Branch/Merge conditionals,
+    and single-emission reductions; callers gate eligibility through
+    :func:`run_dfg_lanes`. Results are bit-exact against the functional
+    executor per lane (the 5-way conformance contract).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    in_names = list(g.inputs)
+    out_names = list(g.outputs)
+    n_lanes = len(inputs_list)
+    lengths = {int(np.asarray(v).shape[0])
+               for ins in inputs_list for v in ins.values()}
+    if len(lengths) != 1:
+        raise CapabilityError(
+            f"{g.name}: a lane-batched pallas grid needs equal stream "
+            f"lengths across lanes, got {sorted(lengths)}")
+    (length,) = lengths
+    check_stream_length(g, length)
+
+    # classify outputs: reduction-fed (one (1,1) carry block per reduction
+    # node) vs full-rate streams (tile blocks)
+    red_of: Dict[str, str] = {}
+    for o in out_names:
+        e = g.operand(o, "a")
+        if g.nodes[e.src].is_reduction():
+            red_of[o] = e.src
+    full_names = [o for o in out_names if o not in red_of]
+    red_names = sorted(set(red_of.values()))
+
+    if length == 0:
+        return [{o: np.zeros(0, dtype=I32) for o in out_names}
+                for _ in inputs_list]
+
+    tile = block_rows * LANES
+    padded = pl.cdiv(length, tile) * tile
+    bpl = padded // tile                   # tiles (grid steps) per lane
+
+    def stack(name: str) -> jax.Array:
+        lanes = []
+        for ins in inputs_list:
+            x = jnp.asarray(np.asarray(ins[name]), dtype=jnp.int32)
+            lanes.append(jnp.pad(x, (0, padded - length)))
+        return jnp.concatenate(lanes).reshape(-1, LANES)
+
+    ins2d = [stack(name) for name in in_names]
+    block = (block_rows, LANES)
+    in_specs = [pl.BlockSpec(block, lambda i: (i, 0)) for _ in in_names]
+    out_specs = [pl.BlockSpec(block, lambda i: (i, 0)) for _ in full_names]
+    out_shapes = [jax.ShapeDtypeStruct((n_lanes * padded // LANES, LANES),
+                                       jnp.int32) for _ in full_names]
+    # one carry/emission block per reduction node, revisited by every grid
+    # step of its lane (sequential TPU grids make the accumulation sound)
+    out_specs += [pl.BlockSpec((1, 1), lambda i: (i // bpl, 0))
+                  for _ in red_names]
+    out_shapes += [jax.ShapeDtypeStruct((n_lanes, 1), jnp.int32)
+                   for _ in red_names]
+
+    fn = pl.pallas_call(
+        _emit_body(g, in_names, full_names, red_names, bpl, length,
+                   block_rows),
+        grid=(n_lanes * bpl,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+    outs = fn(*ins2d)
+    if not isinstance(outs, (list, tuple)):
+        outs = [outs]
+    full_vals = {name: np.asarray(o).reshape(n_lanes, padded)
+                 for name, o in zip(full_names, outs)}
+    red_vals = {name: np.asarray(o)
+                for name, o in zip(red_names, outs[len(full_names):])}
+
+    results: List[Dict[str, np.ndarray]] = []
+    for k in range(n_lanes):
+        lane: Dict[str, np.ndarray] = {}
+        for o in out_names:
+            if o in red_of:
+                lane[o] = red_vals[red_of[o]][k].astype(I32)
+            else:
+                v = full_vals[o][k][:length].astype(I32)
+                if g.nodes[o].emit_every == 0 and v.size:
+                    v = v[-1:]             # OMN stride-0 'last value' mode
+                lane[o] = v
+        results.append(lane)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# the capability-gated dispatcher (what the engine's pallas backend calls)
+# ---------------------------------------------------------------------------
+
+def run_dfg_lanes(g: D.DFG, inputs_list: List[Dict[str, np.ndarray]],
+                  block_rows: int = 8,
+                  interpret: Optional[bool] = None
+                  ) -> List[Dict[str, np.ndarray]]:
+    """Dispatch N same-DFG requests to the fused Pallas substrate.
+
+    Raises :class:`CapabilityError` naming every feature outside the
+    pallas capability set (engine/capabilities.py)."""
+    check_backend(dfg_features(g), "pallas", g.name)
+    return fabric_reduce_lanes(g, inputs_list, block_rows=block_rows,
+                               interpret=interpret)
+
+
+def run_dfg(g: D.DFG, inputs: Dict[str, np.ndarray],
+            block_rows: int = 8,
+            interpret: Optional[bool] = None) -> Dict[str, np.ndarray]:
+    """Single-request dispatch (one lane)."""
+    return run_dfg_lanes(g, [inputs], block_rows=block_rows,
+                         interpret=interpret)[0]

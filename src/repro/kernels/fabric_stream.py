@@ -14,8 +14,13 @@ TPU adaptation of the paper's one-shot mapping strategy (DESIGN.md §2):
   * unrolling (strategy 2)       ->  covered by the lane dimension (every
     tile processes 1024 elements of every lane simultaneously).
 
-Only acyclic DFGs lower here (the fabric's loop-carried kernels map to
-``lax.scan`` on TPU — see DESIGN.md §2 'Branch/Merge' row).
+Only acyclic, reduction-free DFGs lower here; accumulator reductions and
+lane-batched dispatch lower through ``fabric_reduce.py`` (which reuses
+this module's tile layout), and loop-carried kernels stay on the
+sequential simulator — see the backend capability matrix in DESIGN.md §11.
+Branch/Merge conditionals evaluate speculatively with validity masks
+(``ref.eval_dfg_streams``), covering arbitrary select-reducible leg
+pipelines, not just branch-adjacent merges.
 """
 from __future__ import annotations
 

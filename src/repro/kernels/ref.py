@@ -41,71 +41,133 @@ def dfg_node_eval(op: AluOp, a, b):
     raise ValueError(op)
 
 
-def eval_dfg_elementwise(g: D.DFG, inputs: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    """Evaluate an acyclic, branch-resolved DFG over whole streams.
+def eval_dfg_streams(g: D.DFG, inputs: Dict[str, jax.Array]):
+    """Evaluate the acyclic part of a DFG over whole streams, speculatively.
 
-    BRANCH/MERGE pairs must be reducible to selects (complementary
-    predicates) — the pattern the fabric supports; loop-carried kernels are
-    out of scope here (they lower to lax.scan, not a streaming kernel).
+    The TPU adaptation of elastic control flow: every Branch leg is
+    computed on *all* lanes (speculative execution) and a boolean validity
+    mask rides alongside each wire — a Branch splits its mask by the
+    predicate, a Merge rejoins complementary legs with a masked select.
+    This handles arbitrary select-reducible leg pipelines (ops on the legs
+    between Branch and Merge), which the fabric's Fork-Sender/JOIN logic
+    sequences one token at a time.
+
+    Reduction (accumulator) nodes are *not* folded here — a tile-level
+    caller owns the carry state (``kernels/fabric_reduce.py``). Returns
+
+      (stream_outs, red_ins, red_out_of)
+
+    where ``stream_outs`` maps each full-rate OUTPUT name to its value
+    stream, ``red_ins`` maps each reduction node to its per-element operand
+    stream, and ``red_out_of`` maps reduction-fed OUTPUT names to their
+    reduction node. Loop-carried graphs are out of scope (they stay on the
+    sequential simulator — see engine/capabilities.py).
     """
     if g.back_edges():
-        raise ValueError("fabric_stream handles acyclic DFGs only")
+        raise ValueError(f"{g.name}: loop-carried back edge — streaming "
+                         f"evaluation handles acyclic DFGs only")
+    # structural select-reducibility proof (shared with the compile-time
+    # capability gate, engine/capabilities.py — data is opaque at trace
+    # time): a MERGE whose legs are not complementary paths of one
+    # predicate wire is arrival-ordered and must raise, never silently
+    # evaluate as a select. Memoized on the DFG — this function is a
+    # Pallas kernel body, re-traced per grid step.
+    offender = g.__dict__.get("_select_offender", False)
+    if offender is False:
+        from repro.engine.capabilities import select_conds
+        offender = select_conds(g)[1]
+        g.__dict__["_select_offender"] = offender
+    if offender is not None:
+        raise ValueError(
+            f"{g.name}: MERGE '{offender}' joins wires that are not "
+            f"complementary legs of one branch predicate (not "
+            f"select-reducible) — use backend='sim'")
     vals: Dict[tuple, jax.Array] = {}
+    masks: Dict[tuple, jax.Array] = {}
     outs: Dict[str, jax.Array] = {}
+    red_ins: Dict[str, jax.Array] = {}
+    red_out_of: Dict[str, str] = {}
+    full = jnp.ones(jnp.shape(next(iter(inputs.values()))), dtype=bool)
+
     for name in g.topo_order():
         n = g.nodes[name]
+
         def operand(port):
             e = g.operand(name, port)
-            return None if e is None else vals[(e.src, e.src_port)]
+            if e is None:
+                return None, None
+            key = (e.src, e.src_port)
+            return vals[key], masks[key]
+
         if n.kind == D.INPUT:
             vals[(name, "out")] = inputs[name]
+            masks[(name, "out")] = full
         elif n.kind == D.CONST:
             vals[(name, "out")] = jnp.asarray(n.value, dtype=jnp.int32)
+            masks[(name, "out")] = full
+        elif n.kind == D.ALU and n.is_reduction():
+            a, _ = operand("a")
+            if n.value is not None:       # paced counter: acc' = op(acc, c)
+                a = jnp.full(jnp.shape(a), n.value, dtype=jnp.int32)
+            red_ins[name] = a
         elif n.kind == D.ALU:
-            if n.is_reduction():
-                raise ValueError("reductions lower to stream_matmul-style "
-                                 "accumulation, not fabric_stream")
-            a = operand("a")
-            b = operand("b")
+            a, ma = operand("a")
+            b, mb = operand("b")
             if b is None:
-                b = jnp.asarray(n.value, dtype=a.dtype)
+                b, mb = jnp.asarray(n.value, dtype=a.dtype), ma
             vals[(name, "out")] = dfg_node_eval(n.op, a, b)
+            masks[(name, "out")] = ma & mb
         elif n.kind == D.CMP:
-            a = operand("a")
-            b = operand("b")
+            a, ma = operand("a")
+            b, mb = operand("b")
             if b is not None:
-                a = a - b
+                a, ma = a - b, ma & mb
             elif n.value is not None:
                 a = a - jnp.asarray(n.value, dtype=a.dtype)
             r = (a == 0) if n.op == CmpOp.EQZ else (a > 0)
             vals[(name, "out")] = r.astype(jnp.int32)
+            masks[(name, "out")] = ma
         elif n.kind == D.MUX:
-            a, c = operand("a"), operand("ctrl")
-            b = operand("b")
+            a, ma = operand("a")
+            b, mb = operand("b")
+            c, mc = operand("ctrl")
             if b is None:
-                b = jnp.asarray(n.value, dtype=a.dtype)
+                b, mb = jnp.asarray(n.value, dtype=a.dtype), ma
             vals[(name, "out")] = jnp.where(c != 0, a, b)
+            masks[(name, "out")] = ma & mb & mc
         elif n.kind == D.BRANCH:
-            a, c = operand("a"), operand("ctrl")
-            # value networks; the predicate travels alongside for the MERGE
-            vals[(name, "t")] = a
-            vals[(name, "f")] = a
-            vals[(name, "_pred")] = c
+            a, ma = operand("a")
+            c, mc = operand("ctrl")
+            m = ma & mc
+            vals[(name, "t")], masks[(name, "t")] = a, m & (c != 0)
+            vals[(name, "f")], masks[(name, "f")] = a, m & (c == 0)
         elif n.kind == D.MERGE:
-            ea = g.operand(name, "a")
-            eb = g.operand(name, "b")
-            pa = vals.get((ea.src, "_pred"))
-            pb = vals.get((eb.src, "_pred"))
-            pred = pa if pa is not None else pb
-            if pred is None:
-                raise ValueError("MERGE without branch predicates is not "
-                                 "select-reducible")
-            a, b = vals[(ea.src, ea.src_port)], vals[(eb.src, eb.src_port)]
-            take_a = pred != 0 if ea.src_port == "t" else pred == 0
-            vals[(name, "out")] = jnp.where(take_a, a, b)
+            a, ma = operand("a")
+            b, mb = operand("b")
+            # complementary-leg contract, proven structurally up front by
+            # select_conds: exactly one side is valid per lane
+            vals[(name, "out")] = jnp.where(ma, a, b)
+            masks[(name, "out")] = ma | mb
         elif n.kind == D.OUTPUT:
             e = g.operand(name, "a")
-            outs[name] = vals[(e.src, e.src_port)]
+            if g.nodes[e.src].is_reduction():
+                red_out_of[name] = e.src
+            else:
+                outs[name] = vals[(e.src, e.src_port)]
+    return outs, red_ins, red_out_of
+
+
+def eval_dfg_elementwise(g: D.DFG, inputs: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Evaluate an acyclic, reduction-free DFG over whole streams (the
+    ``fabric_stream`` kernel body). Reductions carry state across tiles
+    and lower through ``fabric_reduce`` instead — rejected here by name."""
+    for n in g.nodes.values():
+        if n.is_reduction():
+            raise ValueError(
+                f"{g.name}: accumulator reduction node '{n.name}' "
+                f"[reduction] — lower via kernels/fabric_reduce.py, "
+                f"not fabric_stream")
+    outs, _, _ = eval_dfg_streams(g, inputs)
     return outs
 
 

@@ -1,4 +1,5 @@
-"""Cross-backend differential conformance suite (ISSUE 3 satellite).
+"""Cross-backend differential conformance suite (ISSUE 3 satellite,
+extended to the 5-way gate of ISSUE 5).
 
 A seeded random-DFG generator composes gadgets from the fabric's full
 vocabulary — elementwise ALU/CMP/MUX chains, Branch/Merge conditionals,
@@ -17,7 +18,14 @@ ints, explicit 32-bit wrapping) — deliberately sharing no code with
   4. the *reference* simulator (``elastic_sim_ref``, the original
      token-by-token implementation) — which must agree with the
      vectorized core not just on outputs but on cycle counts, arrival
-     schedules, FU firing counts, and bank beats (ISSUE 4).
+     schedules, FU firing counts, and bank beats (ISSUE 4),
+  5. the **pallas backend** (``kernels/fabric_reduce.run_dfg``, interpret
+     mode on CPU) for every DFG the declared capability set admits
+     (ISSUE 5). Cases outside the set record a *named skip reason* (the
+     missing capability features), and the skip tally is pinned: the
+     corpus is deterministic, so any capability regression — a DFG class
+     silently dropping off the fast substrate — moves the pinned counts
+     and fails the gate.
 
 The deterministic corpus below runs everywhere (>= 200 sim-verified cases,
 the ISSUE acceptance bar); the hypothesis properties widen the sweep when
@@ -48,6 +56,14 @@ from repro.core.mapper import MappingError, map_dfg
 N_CASES = 230
 MIN_SIM_VERIFIED = 200
 MAX_FUNC_NODES = 10          # leaves route-through headroom on 16 PEs
+
+# 5-way gate pins (the corpus is deterministic, so these are EXACT —
+# asserted with equality): 76 cases fall inside the pallas capability set
+# and must verify bit-exact; the other 154 carry loop state /
+# recirculation and record named skips. Any capability change — narrowing
+# *or* widening — moves these and must re-pin them consciously.
+PALLAS_VERIFIED = 76
+PALLAS_SKIPPED = 154
 
 
 def _wrap(v: int) -> int:
@@ -350,15 +366,35 @@ def _mk_case(seed: int, length: int):
     raise AssertionError(f"no viable case near seed {seed}")
 
 
-def _assert_case(seed: int, length: int, with_sim: bool) -> bool:
-    """Run one case across the backends; returns True if sim-verified."""
-    g, inputs, refs = _mk_case(seed, length)
+def _pallas_skip_reason(g, length: int):
+    """Named skip reason when a case falls outside the pallas capability
+    set (None = must run and verify bit-exact). Delegates to the single
+    source of truth the real dispatcher uses."""
+    from repro.engine.capabilities import backend_skip_reason
+    return backend_skip_reason(g, length, "pallas")
+
+
+def _assert_case(seed: int, length: int, with_sim: bool,
+                 with_pallas: bool = False, case=None) -> bool:
+    """Run one case across the backends; returns True if sim-verified.
+    ``case``: a prebuilt ``_mk_case`` result (the corpus loop reuses its
+    graph so the capability-analysis memos hit instead of re-walking a
+    fresh instance)."""
+    g, inputs, refs = case if case is not None else _mk_case(seed, length)
     outs = execute(g, inputs)
     for o, ref in refs.items():
         got = outs[o].tolist()
         assert got == ref, (
             f"seed {seed}: executor vs reference mismatch on {o}: "
             f"{got[:8]} != {ref[:8]} (graph {g.name})")
+    if with_pallas and _pallas_skip_reason(g, length) is None:
+        from repro.kernels.fabric_reduce import run_dfg
+        pouts = run_dfg(g, inputs)
+        for o, ref in refs.items():
+            got = pouts[o].tolist()
+            assert got == ref, (
+                f"seed {seed}: pallas vs reference mismatch on {o}: "
+                f"{got[:8]} != {ref[:8]} (graph {g.name})")
     if not with_sim:
         return False
     try:
@@ -408,17 +444,40 @@ def _assert_case(seed: int, length: int, with_sim: bool) -> bool:
 def test_conformance_corpus():
     sim_verified = 0
     recirc_cases = 0
+    pallas_verified = 0
+    pallas_skips = {}              # seed -> named skip reason
     for seed in range(N_CASES):
         length = (8, 16, 24)[seed % 3]
-        g, _, _ = _mk_case(seed, length)
+        case = _mk_case(seed, length)
+        g = case[0]
         if g.has_recirculation():
             recirc_cases += 1
-        if _assert_case(seed, length, with_sim=True):
+        reason = _pallas_skip_reason(g, length)
+        if reason is None:
+            pallas_verified += 1
+        else:
+            pallas_skips[seed] = reason
+        if _assert_case(seed, length, with_sim=True, with_pallas=True,
+                        case=case):
             sim_verified += 1
     assert sim_verified >= MIN_SIM_VERIFIED, (
         f"only {sim_verified}/{N_CASES} cases were sim-verified "
         f"(need >= {MIN_SIM_VERIFIED}; rest failed to place-and-route)")
     assert recirc_cases >= 30, "corpus lost its data-dependent-loop coverage"
+    # 5-way gate: every admitted case verified above; the tallies are
+    # pinned EXACTLY so capability regressions and silent widenings are
+    # equally loud (the corpus is deterministic, so equality is stable)
+    by_reason = {r: sum(1 for v in pallas_skips.values() if v == r)
+                 for r in set(pallas_skips.values())}
+    assert pallas_verified == PALLAS_VERIFIED, (
+        f"{pallas_verified} cases ran on the pallas backend (pinned "
+        f"{PALLAS_VERIFIED}) — the capability set moved; skips by "
+        f"reason: {by_reason}")
+    assert len(pallas_skips) == PALLAS_SKIPPED, (
+        f"{len(pallas_skips)} pallas skips != pinned {PALLAS_SKIPPED}: "
+        f"{by_reason}")
+    for seed, reason in pallas_skips.items():
+        assert reason, f"seed {seed}: skip without a named reason"
 
 
 def test_conformance_case_is_deterministic():
@@ -441,7 +500,8 @@ def test_property_executor_matches_reference(seed):
 @given(seed=st.integers(min_value=N_CASES, max_value=10**5),
        length=st.sampled_from([4, 8, 20]))
 @settings(deadline=None, max_examples=20)
-def test_property_three_way_agreement(seed, length):
-    """Sim, executor, and the reference agree for every routable graph and
-    stream length."""
-    _assert_case(seed, length, with_sim=True)
+def test_property_five_way_agreement(seed, length):
+    """Both simulators, the executor, the pure-Python reference — and the
+    pallas backend where the capability set admits the graph — agree for
+    every routable graph and stream length."""
+    _assert_case(seed, length, with_sim=True, with_pallas=True)

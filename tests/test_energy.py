@@ -1,0 +1,194 @@
+"""Power/energy model tests (ISSUE 5 satellite): ``core/energy.py`` was
+the last untested core module. Covers the NNLS fit / report round-trip on
+the paper's published Table I samples, feature extraction from real
+mapped-and-simulated paper kernels, the energy arithmetic, and — as a
+property — that the fitted CGRA power predictor is physical: non-negative
+everywhere and monotone in the active-PE count (hierarchical clock gating
+means more enabled PEs can never cost *less* power)."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("ci", deadline=None, derandomize=True,
+                              max_examples=60)
+    settings.register_profile("dev", deadline=None, max_examples=25)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ModuleNotFoundError:
+    from hypothesis_stub import given, settings, st
+
+from repro.core import kernels_lib as K
+from repro.core import paper_data as PD
+from repro.core.elastic_sim import simulate
+from repro.core.energy import (PowerModel, PowerFeatures, energy_uj,
+                               features_from_sim)
+from repro.core.mapper import map_dfg
+
+rng = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# fixtures: mapped + simulated paper kernels with their published powers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def paper_samples():
+    """(kernel name, mapping, sim, PowerFeatures) for each Table I kernel,
+    simulated at a reduced stream length (features are rates, so the
+    length only needs to reach steady state)."""
+    out = []
+    for name, maker in K.ONE_SHOT.items():
+        g = maker()
+        m = map_dfg(g, restarts=300, seed=3)
+        lo, hi = (0, 255) if name == "dither" else (-100, 100)
+        ins = {k: rng.integers(lo, hi, 128).astype(np.int32)
+               for k in g.inputs}
+        sim = simulate(m, ins)
+        t1 = PD.TABLE_I[name]
+        out.append((name, m, sim,
+                    features_from_sim(m, sim, 1.0, t1[5], t1[11])))
+    return out
+
+
+@pytest.fixture(scope="module")
+def fitted(paper_samples):
+    pm = PowerModel()
+    pm.fit([f for _, _, _, f in paper_samples])
+    return pm
+
+
+# ---------------------------------------------------------------------------
+# features_from_sim on the paper kernels
+# ---------------------------------------------------------------------------
+
+def test_features_from_sim_are_physical(paper_samples):
+    for name, m, sim, f in paper_samples:
+        assert 0.0 <= f.duty <= 1.0, name
+        assert f.arith_act >= 0 and f.ctrl_act >= 0, name
+        assert f.route_pes >= 0, name
+        assert f.mem_rate > 0, name          # every kernel streams I/O
+        # activity is firings per cycle: bounded by the enabled FU count
+        assert f.arith_act + f.ctrl_act <= len(m.dfg.nodes), name
+    by_name = {name: f for name, _, _, f in paper_samples}
+    # fft is the arithmetic-heavy kernel of Table I (10 muls/adds per 4
+    # inputs); its arithmetic activity must dominate relu's single mux path
+    assert by_name["fft"].arith_act > by_name["relu"].arith_act
+    # control kernels actually enable control FUs
+    assert by_name["find2min"].ctrl_act > 0
+
+
+def test_features_row_matches_model_structure():
+    f = PowerFeatures(duty=0.5, arith_act=2.0, ctrl_act=1.0, route_pes=4.0,
+                      mem_rate=0.25)
+    row = f.row()
+    assert row == [0.5, 2.0, 1.0, 4.0 * 0.5, 0.25, 1.0]
+    # route-PE leakage is gated with the matrix: duty scales that column
+    assert dataclasses.replace(f, duty=0.0).row()[3] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fit / report round-trip
+# ---------------------------------------------------------------------------
+
+def test_fit_report_round_trip(fitted, paper_samples):
+    rows = fitted.report()
+    assert len(rows) == len(paper_samples)
+    for row in rows:
+        for key in ("cgra_mw_model", "cgra_mw_paper", "cgra_rel_err",
+                    "soc_mw_model", "soc_mw_paper", "soc_rel_err"):
+            assert np.isfinite(row[key]), key
+        # the 6-parameter model over 4 published samples must actually
+        # calibrate — generous bound, catches sign/col-order regressions
+        assert abs(row["cgra_rel_err"]) < 0.75, row
+        assert abs(row["soc_rel_err"]) < 0.75, row
+        assert row["cgra_mw_model"] > 0
+        assert row["soc_mw_model"] > row["cgra_mw_model"] * fitted.gamma[1] \
+            - 1e-9                     # SoC adds uncore power on top
+
+
+def test_fit_coefficients_nonnegative(fitted):
+    assert fitted.beta is not None and fitted.gamma is not None
+    assert np.all(fitted.beta >= 0)
+    assert np.all(fitted.gamma >= 0)
+
+
+def test_predict_requires_fit():
+    pm = PowerModel()
+    with pytest.raises(AssertionError):
+        pm.cgra_mw(PowerFeatures(1, 1, 1, 0, 0.1))
+
+
+# ---------------------------------------------------------------------------
+# energy arithmetic
+# ---------------------------------------------------------------------------
+
+def test_energy_uj_arithmetic():
+    # 10 mW for 250e6 cycles at 250 MHz = 10 mW x 1 s = 10 mJ = 1e4 uJ
+    assert energy_uj(10.0, 250_000_000, clock_mhz=250.0) == \
+        pytest.approx(1e4)
+    # linear in both power and cycles; zero cycles cost nothing
+    assert energy_uj(5.0, 1000) == pytest.approx(energy_uj(10.0, 500))
+    assert energy_uj(123.0, 0) == 0.0
+    # doubling the clock halves the energy of a fixed cycle count
+    assert energy_uj(8.0, 4096, clock_mhz=500.0) == \
+        pytest.approx(energy_uj(8.0, 4096, clock_mhz=250.0) / 2)
+
+
+def test_cpu_energy_comparison_reproduces_table_i_esave():
+    """``energy_uj`` over the published powers and cycle counts must
+    reproduce Table I's energy-saving column: direction exactly (fft/relu
+    save energy, find2min does *not* — esave 0.70), magnitude within the
+    paper's own rounding (the table reports derived columns to 2 digits)."""
+    for name, t1 in PD.TABLE_I.items():
+        cgra = energy_uj(t1[5], t1[0] + t1[1])       # cgra_mw x cycles
+        cpu = energy_uj(t1[8], t1[7])                # cpu_mw x cpu cycles
+        esave = cpu / cgra
+        assert (esave > 1) == (t1[10] > 1), name
+        assert esave == pytest.approx(t1[10], rel=0.3), name
+
+
+# ---------------------------------------------------------------------------
+# property: fitted power is non-negative and monotone in active-PE count
+# ---------------------------------------------------------------------------
+
+@given(duty=st.floats(0.0, 1.0), arith=st.floats(0.0, 16.0),
+       ctrl=st.floats(0.0, 16.0), route=st.integers(0, 12),
+       extra=st.integers(1, 8), mem=st.floats(0.0, 4.0))
+@settings(deadline=None)
+def test_property_power_nonnegative_and_monotone_in_pes(
+        duty, arith, ctrl, route, extra, mem):
+    pm = _FITTED_FOR_PROPERTY()
+    f = PowerFeatures(duty=duty, arith_act=arith, ctrl_act=ctrl,
+                      route_pes=float(route), mem_rate=mem)
+    p = pm.cgra_mw(f)
+    assert p >= 0.0
+    assert pm.soc_mw(f) >= 0.0
+    # activating more PEs (route-throughs here, the pure PE-count knob)
+    # can only hold or raise power under hierarchical clock gating
+    more = dataclasses.replace(f, route_pes=float(route + extra))
+    assert pm.cgra_mw(more) >= p - 1e-12
+
+
+_PM_CACHE = []
+
+
+def _FITTED_FOR_PROPERTY():
+    """Module-lazy fitted model (hypothesis calls the property many times;
+    fixtures aren't available inside @given)."""
+    if not _PM_CACHE:
+        samples = []
+        for name, maker in K.ONE_SHOT.items():
+            g = maker()
+            m = map_dfg(g, restarts=300, seed=3)
+            ins = {k: rng.integers(0, 100, 64).astype(np.int32)
+                   for k in g.inputs}
+            t1 = PD.TABLE_I[name]
+            samples.append(features_from_sim(m, simulate(m, ins), 1.0,
+                                             t1[5], t1[11]))
+        pm = PowerModel()
+        pm.fit(samples)
+        _PM_CACHE.append(pm)
+    return _PM_CACHE[0]

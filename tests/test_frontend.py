@@ -221,11 +221,37 @@ def test_offload_pallas_backend_matches_sim():
     np.testing.assert_array_equal(ks(x, y), kp(x, y))
 
 
-def test_offload_pallas_rejects_reductions():
-    k = offload(_mac1, backend="pallas")
-    a = np.ones(8, np.int32)
-    with pytest.raises(FrontendError):
-        k(a, a)
+def test_offload_pallas_runs_reductions():
+    """The capability set admits single-emission reductions: a traced dot
+    product dispatches to the fabric_reduce carry kernel, bit-exact vs
+    the debug numpy check and the sim backend."""
+    kp = offload(_mac1, backend="pallas", debug=True)
+    ks = offload(_mac1, backend="sim")
+    a = rng.integers(-50, 50, 16).astype(np.int32)
+    b = rng.integers(-50, 50, 16).astype(np.int32)
+    assert np.int32(kp(a, b)) == np.int32(ks(a, b))
+    assert kp.last.backend == "pallas"
+
+
+def test_offload_pallas_rejects_loop_state_by_name():
+    """Feature detection, not blanket refusal: the rejection diagnostic
+    must name the offending capability feature."""
+    from repro.engine import CapabilityError
+
+    def _dither_like(x):
+        import jax.numpy as jnp
+        from jax import lax
+
+        def f(err, xi):
+            v = xi + err
+            out = jnp.where(v > 127, 255, 0)
+            return v - out, out
+        _, ys = lax.scan(f, 0, x)
+        return ys
+
+    k = offload(_dither_like, backend="pallas")
+    with pytest.raises(CapabilityError, match="loop-carried back edge"):
+        k(np.ones(8, np.int32))
 
 
 def test_offload_cond_kernel_end_to_end():
