@@ -165,6 +165,12 @@ def run(length: int = 64, n_requests: int = 16, backend: str = "sim",
             "wall_us_batched": t_batched * 1e6,
             "wall_us_naive_cold": t_naive_cold * 1e6,
             "wall_us_batched_cold": t_batched_cold * 1e6,
+            # batching must never cost wall time: the batched dispatch does
+            # strictly less work (one flush, fewer config fetches). A True
+            # here means scheduler overhead ate the savings — a warning,
+            # not a failure (wall time is machine-noisy; cycles are the
+            # contract), surfaced per row and summarized by main()
+            "batching_regressed": bool(t_batched > t_naive),
         }
         if backend == "pallas":
             # value parity vs a sim engine over the identical requests —
@@ -247,6 +253,15 @@ def main(length: int = 64, n_requests: int = 16, json_path: str = "",
                 assert r[field] == s[field], (
                     f"{r['kernel']}: pallas {field} {r[field]} != sim "
                     f"{s[field]}")
+    regressed = [r for r in rows if r["batching_regressed"]]
+    if regressed:
+        print(f"  WARNING: batched dispatch slower than naive (wall) on "
+              f"{len(regressed)}/{len(rows)} rows:")
+        for r in regressed:
+            print(f"    {r['kernel']:10s} [{r['backend']}/{r['geometry']}] "
+                  f"batched {r['wall_us_batched']:.0f} us > naive "
+                  f"{r['wall_us_naive']:.0f} us "
+                  f"(cycles still saved: {r['rearm_cycles_saved']})")
     if json_path:
         print(f"  wrote {write_json(rows, json_path)}")
     return rows

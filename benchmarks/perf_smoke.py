@@ -54,6 +54,16 @@ def calibrate() -> float:
 
 
 def main(factor: float = 2.0, baseline_path: str = BASELINE_PATH) -> int:
+    from repro import obs
+
+    # the wall budgets below are defined for the obs-disabled default
+    # (STRELA_OBS=0): instrumentation must cost nothing when off, so the
+    # smoke run both requires obs off up front and asserts afterwards that
+    # the benchmark left zero observability residue behind
+    if obs.enabled():
+        print("  perf smoke requires STRELA_OBS=0 (budgets are defined "
+              "for the zero-overhead disabled mode)")
+        return 1
     with open(baseline_path) as f:
         baseline = json.load(f)
     scale = 1.0
@@ -125,6 +135,17 @@ def main(factor: float = 2.0, baseline_path: str = BASELINE_PATH) -> int:
         failures.append(("pallas", "rows",
                          sorted(r["kernel"] for r in rows_p),
                          PALLAS_SMOKE_KERNELS))
+
+    # obs smoke: the entire bench ran through the instrumented pipeline
+    # with observability disabled — not one span may have been recorded
+    # and no tracer/registry may have materialized (the disabled path is
+    # the zero-overhead contract the wall budgets above price in)
+    if obs.enabled() or obs.ring_len() != 0 or obs.registry() is not None:
+        print(f"  OBS LEAKED: enabled={obs.enabled()} "
+              f"ring={obs.ring_len()} registry={obs.registry()!r}")
+        failures.append(("obs", "disabled_mode_noop", obs.ring_len(), 0))
+    else:
+        print("  obs disabled-mode no-op: ok (0 spans, no registry)")
 
     if failures:
         print(f"  PERF SMOKE FAILED: {failures}")

@@ -8,14 +8,18 @@ order, dispatched twice —
   2. batched:  requests are queued and flushed grouped by config class, so
                same-kernel runs pay only the stream re-arm preamble.
 
-Prints per-strategy Tally breakdowns and the configuration cycles the
-batcher saved. Also shows a non-4x4 geometry handling the same artifact
-pipeline.
+Prints per-strategy Tally breakdowns, the configuration cycles the
+batcher saved, and — via the ``repro.obs`` metrics registry — per-request
+latency percentiles (p50/p90/p99) and throughput for each strategy. Also
+shows a non-4x4 geometry handling the same artifact pipeline.
 
 Run: PYTHONPATH=src python examples/engine_serve.py
 """
+import time
+
 import numpy as np
 
+from repro import obs
 from repro.core import kernels_lib as K
 from repro.core.fabric import Fabric
 from repro.engine import ArtifactCache, Engine
@@ -40,6 +44,17 @@ def make_traffic(rng):
     return kernels, traffic
 
 
+def _latency_line(label: str, wall_s: float, n_requests: int) -> None:
+    """p50/p90/p99 + throughput from the obs metrics registry: the engine
+    itself recorded every request's latency into the
+    ``engine.request_latency_us`` histogram while dispatching."""
+    hist = obs.registry().histogram("engine.request_latency_us")
+    p = hist.percentiles((50, 90, 99))
+    print(f"{label}: latency p50={p[50]:7.1f} us  p90={p[90]:7.1f} us  "
+          f"p99={p[99]:7.1f} us  throughput={n_requests / wall_s:8.0f} req/s"
+          f"  ({hist.count} samples)")
+
+
 def main():
     rng = np.random.default_rng(42)
     kernels, traffic = make_traffic(rng)
@@ -47,25 +62,34 @@ def main():
     print(f"traffic: {len(traffic)} requests, {len(kernels)} config classes,"
           f" arrival order interleaved (worst case for a naive dispatcher)")
 
+    obs.enable(fresh=True)             # per-request latency metrics on
     naive = Engine(cache=ArtifactCache(memory_only=True))
     arts = {name: naive.compile(g) for name, g in kernels.items()}
+    t0 = time.perf_counter()
     for name, _, ins in traffic:
         naive.run(arts[name], ins)
+    wall_naive = time.perf_counter() - t0
     t = naive.tally
     print(f"\nnaive   : config={t.config:6d} rearm={t.rearm:6d} "
           f"exec={t.exec:6d} total={t.total:6d} (duty {t.duty:.2f})")
+    _latency_line("naive   ", wall_naive, len(traffic))
 
+    obs.enable(fresh=True)             # fresh registry: batched phase only
     batched = Engine(cache=ArtifactCache(memory_only=True))
     arts = {name: batched.compile(g) for name, g in kernels.items()}
+    t0 = time.perf_counter()
     handles = [(name, batched.submit(arts[name], ins))
                for name, _, ins in traffic]
     batched.flush()
+    wall_batched = time.perf_counter() - t0
     t = batched.tally
-    print(f"batched : config={t.config:6d} rearm={t.rearm:6d} "
+    print(f"\nbatched : config={t.config:6d} rearm={t.rearm:6d} "
           f"exec={t.exec:6d} total={t.total:6d} (duty {t.duty:.2f})")
+    _latency_line("batched ", wall_batched, len(traffic))
     print(f"batching saved {batched.stats.config_cycles_saved} configuration"
           f" cycles ({batched.stats.requests} requests,"
           f" {batched.stats.flushes} flush)")
+    obs.disable()
 
     # results stay exact — spot-check one relu request
     name, h = next((n, h) for n, h in handles if n == "relu")

@@ -51,6 +51,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import dfg as D
 from repro.core.executor import ALU_FN_I as _ALU_FN, wrap_i as _wrap_i
 from repro.core.fabric import FU_INS, FU_OUT, Res
@@ -641,8 +642,11 @@ def simulate(m: Mapping, inputs: Dict[str, np.ndarray],
         din, dout = _default_streams(m.dfg, length, bus.n_banks)
         streams_in = streams_in or din
         streams_out = streams_out or dout
-    return _drive(_run_lane(_station_graph(m), inputs, streams_in,
-                            streams_out, bus, max_cycles))
+    with obs.span("sim.cycle_sim", kernel=m.dfg.name) as sp:
+        res = _drive(_run_lane(_station_graph(m), inputs, streams_in,
+                               streams_out, bus, max_cycles))
+        sp.set(cycles=res.cycles)
+        return res
 
 
 def _station_graph(m: Mapping) -> StationGraph:
@@ -669,6 +673,7 @@ def simulate_lanes(m: Mapping, inputs_list: List[Dict[str, np.ndarray]],
     ``simulate`` calls (asserted by tests/test_timing_trace.py).
     """
     bus = bus or BusConfig()
+    obs.inc("sim.lane_sweeps")
     sg = _station_graph(m)
     lanes = []
     for inputs in inputs_list:

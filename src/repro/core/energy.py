@@ -109,23 +109,32 @@ CPU_MW = 3.7
 SOC_CPU_MW = 27.2      # mean of the published SoC-CPU column
 
 
-def features_from_sim(mapping, sim, duty: float = 1.0,
-                      cgra_mw_paper=None, soc_mw_paper=None) -> PowerFeatures:
-    """Build PowerFeatures from a Mapping + SimResult."""
-    from repro.core import dfg as D
-    g = mapping.dfg
-    cycles = max(sim.cycles, 1)
-    arith = sum(cnt for n, cnt in sim.fu_firings.items()
-                if g.nodes[n].kind == D.ALU) / cycles
-    ctrl = sum(cnt for n, cnt in sim.fu_firings.items()
-               if g.nodes[n].kind != D.ALU) / cycles
-    route = mapping.n_active_pes() - len(mapping.place)
-    mem_rate = sim.bank_beats / cycles
-    return PowerFeatures(duty=duty, arith_act=arith * duty,
-                         ctrl_act=ctrl * duty, route_pes=route,
-                         mem_rate=mem_rate * duty,
+def features_from_profile(profile, duty: float = 1.0, cgra_mw_paper=None,
+                          soc_mw_paper=None) -> PowerFeatures:
+    """Build PowerFeatures from a fabric profile
+    (``repro.obs.profiler.FabricProfile``): the profiler's per-PE firing
+    counts ARE the power model's activity factors, so utilization reports
+    and energy reports can never disagree."""
+    cycles = max(profile.cycles, 1)
+    return PowerFeatures(duty=duty,
+                         arith_act=profile.arith_firings / cycles * duty,
+                         ctrl_act=profile.ctrl_firings / cycles * duty,
+                         route_pes=profile.route_pes,
+                         mem_rate=profile.bank_beats / cycles * duty,
                          cgra_mw_paper=cgra_mw_paper,
                          soc_mw_paper=soc_mw_paper)
+
+
+def features_from_sim(mapping, sim, duty: float = 1.0,
+                      cgra_mw_paper=None, soc_mw_paper=None) -> PowerFeatures:
+    """Build PowerFeatures from a Mapping + SimResult.
+
+    Delegates through the fabric profiler (``repro.obs.profiler``), the
+    single source of truth for per-resource firing attribution."""
+    from repro.obs.profiler import profile_sim
+    return features_from_profile(profile_sim(mapping, sim), duty=duty,
+                                 cgra_mw_paper=cgra_mw_paper,
+                                 soc_mw_paper=soc_mw_paper)
 
 
 def energy_uj(power_mw: float, cycles: int, clock_mhz: float = 250.0) -> float:

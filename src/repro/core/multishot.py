@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import kernels_lib as K
 from repro.core.dfg import DFG
 from repro.core.elastic_sim import SimResult, TimingTrace, simulate
@@ -162,43 +163,58 @@ class ShotRunner:
         ``outs``: pre-computed shot values (e.g. one lane of a batched
         pallas grid) — cycle accounting still runs, value computation is
         skipped."""
-        if outs is None:
-            outs = self.value_fn(g, inputs)
-        if not self.with_timing:
-            return outs
-        cfg_key = config_class or key
-        m = self.mapping(cfg_key, g)
-        if self._current_kernel != cfg_key:
-            self.tally.config += m.config_cycles()
-            self._current_kernel = cfg_key
-        (length,) = {v.shape[0] for v in inputs.values()}
-        sig = (cfg_key, length, layout)
-        if sig not in self._sims:
-            tkey = (cfg_key, length, tuple(layout), self.bus.n_banks)
-            trace = self._traces.get(tkey)
-            if trace is not None and g.is_static_rate():
-                # timing/value decoupling: the cycle schedule of a
-                # static-rate DFG is value-independent, so replay the
-                # recorded trace and take the values from the functional
-                # executor — no simulation on the repeat-dispatch path
-                self._sims[sig] = trace.replay(outs)
+        with obs.span("shot", key=key,
+                      config_class=config_class or key) as sp:
+            if outs is None:
+                with obs.span("shot.values", key=key):
+                    outs = self.value_fn(g, inputs)
+            if not self.with_timing:
+                return outs
+            cfg_key = config_class or key
+            m = self.mapping(cfg_key, g)
+            if self._current_kernel != cfg_key:
+                self.tally.config += m.config_cycles()
+                self._current_kernel = cfg_key
+                obs.inc("shot.config_fetches")
+            (length,) = {v.shape[0] for v in inputs.values()}
+            sig = (cfg_key, length, layout)
+            if sig not in self._sims:
+                tkey = (cfg_key, length, tuple(layout), self.bus.n_banks)
+                trace = self._traces.get(tkey)
+                if trace is not None and g.is_static_rate():
+                    # timing/value decoupling: the cycle schedule of a
+                    # static-rate DFG is value-independent, so replay the
+                    # recorded trace and take the values from the functional
+                    # executor — no simulation on the repeat-dispatch path
+                    with obs.span("shot.trace_replay", key=cfg_key):
+                        self._sims[sig] = trace.replay(outs)
+                    obs.inc("shot.trace_replays")
+                else:
+                    sin, sout = _shot_streams(g, length, layout,
+                                              self.bus.n_banks)
+                    with obs.span("shot.simulate", key=cfg_key,
+                                  length=length):
+                        sim = simulate(m, inputs, streams_in=sin,
+                                       streams_out=sout, bus=self.bus)
+                    obs.inc("shot.fresh_sims")
+                    self._sims[sig] = sim
+                    if g.is_static_rate():
+                        trace = TimingTrace.from_sim(sim, length,
+                                                     tuple(layout),
+                                                     self.bus.n_banks)
+                        self._traces[tkey] = trace
+                        self._fresh_traces[tkey] = trace
+                        obs.inc("shot.traces_recorded")
             else:
-                sin, sout = _shot_streams(g, length, layout,
-                                          self.bus.n_banks)
-                sim = simulate(m, inputs, streams_in=sin, streams_out=sout,
-                               bus=self.bus)
-                self._sims[sig] = sim
-                if g.is_static_rate():
-                    trace = TimingTrace.from_sim(sim, length, tuple(layout),
-                                                 self.bus.n_banks)
-                    self._traces[tkey] = trace
-                    self._fresh_traces[tkey] = trace
-        sim = self._sims[sig]
-        self.tally.exec += sim.cycles
-        self.tally.rearm += rearm_cycles(streams_changed, pe_config_words)
-        self.tally.ops += sum(sim.fu_firings.values())
-        self.tally.shots += 1
-        return outs
+                obs.inc("shot.sim_memo_hits")
+            sim = self._sims[sig]
+            self.tally.exec += sim.cycles
+            self.tally.rearm += rearm_cycles(streams_changed,
+                                             pe_config_words)
+            self.tally.ops += sum(sim.fu_firings.values())
+            self.tally.shots += 1
+            sp.set(cycles=sim.cycles, length=length)
+            return outs
 
     def rep_sims(self) -> Dict[Tuple, SimResult]:
         return dict(self._sims)

@@ -98,6 +98,17 @@ class CompiledArtifact:
     def total_config_words(self) -> int:
         return sum(len(w) for w in self.config_words.values())
 
+    def trace_for(self, key: str, length: Optional[int] = None
+                  ) -> Optional[TimingTrace]:
+        """The recorded timing trace of shot/config-class ``key`` (first
+        match when ``length`` is None — artifacts usually carry one trace
+        per shot). Consumers: the fabric profiler attributes per-PE
+        occupancy from exactly these firing counts (``repro.obs``)."""
+        for (k, tlen, _layout, _banks), tr in self.timing_traces.items():
+            if k == key and (length is None or tlen == length):
+                return tr
+        return None
+
     def config_cycles(self) -> int:
         """Full-reconfiguration cost: config fetch for every shot class."""
         return sum(s.mapping.config_cycles() for s in self.plan.shots)

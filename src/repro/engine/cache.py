@@ -27,6 +27,7 @@ import os
 import tempfile
 from typing import Dict, Optional
 
+from repro import obs
 from repro.engine.artifact import ArtifactError, CompiledArtifact
 
 
@@ -64,6 +65,7 @@ class ArtifactCache:
         art = self._mem.get(key)
         if art is not None:
             self.hits += 1
+            obs.inc("artifact_cache.hit")
             return art
         if not self.memory_only:
             path = self._path(key)
@@ -84,12 +86,15 @@ class ArtifactCache:
                 else:
                     self._mem[key] = art
                     self.disk_hits += 1
+                    obs.inc("artifact_cache.disk_hit")
                     return art
         self.misses += 1
+        obs.inc("artifact_cache.miss")
         return None
 
     def put(self, art: CompiledArtifact) -> None:
         self._mem[art.key] = art
+        obs.inc("artifact_cache.put")
         if self.memory_only:
             return
         os.makedirs(self.root, exist_ok=True)

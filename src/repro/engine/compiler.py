@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core import dfg as D
 from repro.core.fabric import Fabric
 from repro.core.isa import config_stream
@@ -111,8 +112,10 @@ def build_artifact(g: D.DFG, key: str, fabric: Fabric, backend: str,
     """
     from repro.engine import capabilities
     from repro.frontend import partition
-    pl = partition.plan(g, fabric, restarts=restarts, pe_limit=pe_limit)
     name = name or g.name
+    with obs.span("pnr", kernel=name, backend=backend) as sp:
+        pl = partition.plan(g, fabric, restarts=restarts, pe_limit=pe_limit)
+        sp.set(shots=pl.n_shots)
     features = capabilities.plan_features(pl)
     capabilities.check_backend(features, backend, name)
     if backend == "pallas" and length is not None:
@@ -120,12 +123,13 @@ def build_artifact(g: D.DFG, key: str, fabric: Fabric, backend: str,
             capabilities.check_stream_length(shot.dfg, length, backend)
     config_class = f"{name}:{key[:10]}"
     words: Dict[str, List[int]] = {}
-    for i, shot in enumerate(pl.shots):
-        # globally unique shot keys: runner memoization must never alias two
-        # artifacts whose shot DFGs happen to share a name
-        shot.key = config_class if pl.n_shots == 1 \
-            else f"{config_class}/s{i}"
-        words[shot.key] = config_stream(generate_configs(shot.mapping))
+    with obs.span("config_emit", kernel=name):
+        for i, shot in enumerate(pl.shots):
+            # globally unique shot keys: runner memoization must never alias
+            # two artifacts whose shot DFGs happen to share a name
+            shot.key = config_class if pl.n_shots == 1 \
+                else f"{config_class}/s{i}"
+            words[shot.key] = config_stream(generate_configs(shot.mapping))
     return CompiledArtifact(
         name=name, key=key, backend=backend, geometry=geometry_of(fabric),
         plan=pl, config_words=words, config_class=config_class,
@@ -149,14 +153,20 @@ def compile(fn_or_dfg: Union[Callable, D.DFG], length: Optional[int] = None,
 
     if isinstance(fn_or_dfg, D.DFG):
         g = fn_or_dfg
-        key = dfg_digest(g, geometry, backend, pe_limit)
-        hit = cache.get(key)
-        if hit is not None:
-            return hit
-        art = build_artifact(g, key, fabric, backend, name=name,
-                             restarts=restarts, pe_limit=pe_limit)
-        cache.put(art)
-        return art
+        with obs.span("compile", kernel=name or g.name,
+                      backend=backend) as sp:
+            key = dfg_digest(g, geometry, backend, pe_limit)
+            with obs.span("cache.lookup", key=key[:12]):
+                hit = cache.get(key)
+            if hit is not None:
+                obs.inc("compile.cache_hits")
+                sp.set(cache="hit")
+                return hit
+            obs.inc("compile.cache_misses")
+            art = build_artifact(g, key, fabric, backend, name=name,
+                                 restarts=restarts, pe_limit=pe_limit)
+            cache.put(art)
+            return art
 
     if not callable(fn_or_dfg):
         raise ArtifactError(f"compile() takes a DFG or a callable, got "
@@ -166,20 +176,28 @@ def compile(fn_or_dfg: Union[Callable, D.DFG], length: Optional[int] = None,
     import inspect
     import jax
     fn = fn_or_dfg
-    arg_names = [p.name for p in inspect.signature(fn).parameters.values()
-                 if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
-    key, out_shape, element_mode = fn_cache_key(
-        fn, length, mode, backend, geometry, arg_names, pe_limit)
-    hit = cache.get(key)
-    if hit is not None:
-        return hit
-    from repro.frontend.tracer import trace
     kname = name or getattr(fn, "__name__", "kernel")
-    g = trace(fn, length, name=kname, mode=mode)
-    leaves, _ = jax.tree_util.tree_flatten(out_shape)
-    shapes = [(length,) if element_mode else tuple(l.shape) for l in leaves]
-    art = build_artifact(g, key, fabric, backend, name=kname, length=length,
-                         element_mode=element_mode, out_shapes=shapes,
-                         restarts=restarts, pe_limit=pe_limit)
-    cache.put(art)
-    return art
+    with obs.span("compile", kernel=kname, backend=backend) as sp:
+        arg_names = [p.name for p in inspect.signature(fn).parameters.values()
+                     if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+        key, out_shape, element_mode = fn_cache_key(
+            fn, length, mode, backend, geometry, arg_names, pe_limit)
+        with obs.span("cache.lookup", key=key[:12]):
+            hit = cache.get(key)
+        if hit is not None:
+            obs.inc("compile.cache_hits")
+            sp.set(cache="hit")
+            return hit
+        obs.inc("compile.cache_misses")
+        from repro.frontend.tracer import trace
+        with obs.span("frontend.trace", kernel=kname):
+            g = trace(fn, length, name=kname, mode=mode)
+        leaves, _ = jax.tree_util.tree_flatten(out_shape)
+        shapes = [(length,) if element_mode else tuple(l.shape)
+                  for l in leaves]
+        art = build_artifact(g, key, fabric, backend, name=kname,
+                             length=length, element_mode=element_mode,
+                             out_shapes=shapes, restarts=restarts,
+                             pe_limit=pe_limit)
+        cache.put(art)
+        return art

@@ -41,10 +41,12 @@ one-by-one, so the batching savings are directly observable.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core.fabric import Fabric
 from repro.core.multishot import ShotRunner, Tally
 from repro.engine import capabilities
@@ -62,7 +64,15 @@ def _pallas_value_fn(g, inputs):
 
 @dataclasses.dataclass
 class EngineStats:
-    """Batching observability: actual vs naive-dispatch configuration cost."""
+    """Batching observability: actual vs naive-dispatch configuration cost.
+
+    Re-based on ``repro.obs`` (ISSUE 6) without breaking this public API:
+    the dataclass fields stay authoritative and always update; when the
+    obs metrics registry is enabled every increment is mirrored into the
+    ``engine.*`` counters/gauges (see ``Engine._execute`` / ``flush``),
+    and :meth:`publish` snapshots the whole struct into the registry so
+    exporters see the same numbers clients read here.
+    """
 
     requests: int = 0
     flushes: int = 0
@@ -75,6 +85,18 @@ class EngineStats:
     @property
     def config_cycles_saved(self) -> int:
         return self.config_cycles_naive - self.config_cycles_paid
+
+    def publish(self, registry=None) -> None:
+        """Snapshot every field into the obs metrics registry as
+        ``engine.stats.*`` gauges (no-op when obs is disabled)."""
+        registry = registry if registry is not None else obs.registry()
+        if registry is None:
+            return
+        for f in dataclasses.fields(self):
+            registry.gauge(f"engine.stats.{f.name}").set(
+                getattr(self, f.name))
+        registry.gauge("engine.stats.config_cycles_saved").set(
+            self.config_cycles_saved)
 
 
 class Handle:
@@ -178,6 +200,7 @@ class Engine:
             streams_changed = len(g.inputs) + len(g.outputs)
         h = Handle(artifact, inputs, streams_changed, layout, pe_config_words)
         self._queue.append(h)
+        obs.set_gauge("engine.queue_depth", len(self._queue))
         return h
 
     def flush(self) -> List[Handle]:
@@ -191,60 +214,78 @@ class Engine:
         if not self._queue:
             return []
         queue, self._queue = self._queue, []
+        obs.set_gauge("engine.queue_depth", 0)
         # stable group-by: classes keep first-arrival order, requests keep
         # arrival order within their class
         class_rank: Dict[str, int] = {}
+        class_size: Dict[str, int] = {}
         for h in queue:
-            class_rank.setdefault(h.artifact.config_class, len(class_rank))
+            cls = h.artifact.config_class
+            class_rank.setdefault(cls, len(class_rank))
+            class_size[cls] = class_size.get(cls, 0) + 1
         queue.sort(key=lambda h: class_rank[h.artifact.config_class])
+        if obs.enabled():
+            for n in class_size.values():
+                obs.observe("engine.batch_size", n)
         current: List[Handle] = []       # the unit a raise would poison
-        try:
-            i = 0
-            while i < len(queue):
-                batch = [queue[i]]
-                if self.backend == "pallas" and \
-                        queue[i].artifact.n_shots == 1:
-                    la = self._lane_lengths(queue[i])
-                    j = i + 1
-                    while j < len(queue) and \
-                            self._lane_compatible(queue[i], queue[j], la):
-                        batch.append(queue[j])
-                        j += 1
-                outs_list = None
-                if len(batch) > 1:
-                    current = batch
-                    try:
-                        outs_list = self._run_lanes(batch)
-                    except Exception:
-                        # the grid fails as a unit with no way to tell
-                        # which lane is at fault: fall back to
-                        # per-request dispatch so only the actually-bad
-                        # request is affected — counted, so a systematic
-                        # grid regression (batching silently lost) is
-                        # observable in the stats
-                        self.stats.lane_batch_failures += 1
-                        outs_list = None
-                if outs_list is not None:
-                    self.stats.lane_batches += 1
-                    self.stats.lane_requests += len(batch)
-                    for h, outs in zip(batch, outs_list):
-                        current = [h]
-                        self._execute(h, outs=outs)
-                else:
-                    for h in batch:
-                        current = [h]
-                        self._execute(h)
-                i += len(batch)
-        except Exception:
-            # never strand accepted requests — but never retry the unit
-            # that raised either (re-queuing the poisoned request would
-            # wedge every flush behind it forever)
-            poisoned = {id(h) for h in current}
-            self._queue = [h for h in queue
-                           if not h._done and id(h) not in poisoned] \
-                + self._queue
-            raise
+        with obs.span("schedule.flush", requests=len(queue),
+                      classes=len(class_rank), backend=self.backend):
+            try:
+                i = 0
+                while i < len(queue):
+                    batch = [queue[i]]
+                    if self.backend == "pallas" and \
+                            queue[i].artifact.n_shots == 1:
+                        la = self._lane_lengths(queue[i])
+                        j = i + 1
+                        while j < len(queue) and \
+                                self._lane_compatible(queue[i], queue[j], la):
+                            batch.append(queue[j])
+                            j += 1
+                    outs_list = None
+                    if len(batch) > 1:
+                        current = batch
+                        try:
+                            outs_list = self._run_lanes(batch)
+                        except Exception:
+                            # the grid fails as a unit with no way to tell
+                            # which lane is at fault: fall back to
+                            # per-request dispatch so only the actually-bad
+                            # request is affected — counted, so a systematic
+                            # grid regression (batching silently lost) is
+                            # observable in the stats
+                            self.stats.lane_batch_failures += 1
+                            obs.inc("engine.lane_batch_failures")
+                            outs_list = None
+                    if outs_list is not None:
+                        self.stats.lane_batches += 1
+                        self.stats.lane_requests += len(batch)
+                        obs.inc("engine.lane_batches")
+                        obs.observe("engine.lane_occupancy", len(batch))
+                        for h, outs in zip(batch, outs_list):
+                            current = [h]
+                            self._execute(h, outs=outs)
+                    else:
+                        for h in batch:
+                            current = [h]
+                            self._execute(h)
+                    i += len(batch)
+            except Exception:
+                # never strand accepted requests — but never retry the unit
+                # that raised either (re-queuing the poisoned request would
+                # wedge every flush behind it forever)
+                poisoned = {id(h) for h in current}
+                self._queue = [h for h in queue
+                               if not h._done and id(h) not in poisoned] \
+                    + self._queue
+                obs.set_gauge("engine.queue_depth", len(self._queue))
+                raise
         self.stats.flushes += 1
+        obs.inc("engine.flushes")
+        if obs.enabled():
+            obs.set_gauge("engine.rearm_cycles_saved",
+                          self.stats.config_cycles_saved)
+            self.stats.publish()
         return queue
 
     def run(self, artifact: CompiledArtifact,
@@ -294,6 +335,7 @@ class Engine:
                  outs: Optional[Dict[str, np.ndarray]] = None) -> None:
         art = h.artifact
         before = self.runner.tally.config
+        t0 = time.perf_counter() if obs.enabled() else 0.0
         self.stats.config_cycles_naive += art.config_cycles()
         for shot in art.plan.shots:
             self.runner.seed_mapping(shot.key, shot.mapping)
@@ -302,22 +344,32 @@ class Engine:
         prev_value_fn = self.runner.value_fn
         self.runner.value_fn = self._value_fn
         try:
-            if art.n_shots == 1:
-                shot = art.plan.shots[0]
-                ins = {iname: np.asarray(h.inputs[iname], dtype=np.int32)
-                       for iname, _ in shot.inputs}
-                h._outputs = self.runner.run_shot(
-                    shot.key, shot.dfg, ins,
-                    streams_changed=h.streams_changed,
-                    pe_config_words=h.pe_config_words, layout=h.layout,
-                    config_class=art.config_class, outs=outs)
-            else:
-                h._outputs = art.plan.run(h.inputs, runner=self.runner)
+            with obs.span(f"dispatch.{self.backend}", kernel=art.name,
+                          config_class=art.config_class,
+                          shots=art.n_shots):
+                if art.n_shots == 1:
+                    shot = art.plan.shots[0]
+                    ins = {iname: np.asarray(h.inputs[iname], dtype=np.int32)
+                           for iname, _ in shot.inputs}
+                    h._outputs = self.runner.run_shot(
+                        shot.key, shot.dfg, ins,
+                        streams_changed=h.streams_changed,
+                        pe_config_words=h.pe_config_words, layout=h.layout,
+                        config_class=art.config_class, outs=outs)
+                else:
+                    h._outputs = art.plan.run(h.inputs, runner=self.runner)
         finally:
             self.runner.value_fn = prev_value_fn
         h._done = True
         self.stats.requests += 1
-        self.stats.config_cycles_paid += self.runner.tally.config - before
+        paid = self.runner.tally.config - before
+        self.stats.config_cycles_paid += paid
+        if t0:
+            obs.observe("engine.request_latency_us",
+                        (time.perf_counter() - t0) * 1e6)
+            obs.inc("engine.requests")
+            obs.inc("engine.config_cycles_paid", paid)
+            obs.inc("engine.config_cycles_naive", art.config_cycles())
         self._harvest_traces(art)
 
     def _harvest_traces(self, art: CompiledArtifact) -> None:

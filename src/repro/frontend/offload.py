@@ -71,12 +71,25 @@ class RunInfo:
     sim: Optional[SimResult] = None       # single-shot sim backend
     tally: Optional[Tally] = None         # multi-shot plans
     est_cycles: Optional[int] = None      # model estimate (pallas backend)
+    mapping: Optional[Mapping] = None     # placement behind ``sim``
+    length: Optional[int] = None          # stream extent of the call
 
     @property
     def ii(self) -> float:
         if self.sim is None:
             raise FrontendError("II is only measured on the sim backend")
         return self.sim.steady_ii()
+
+    @property
+    def profile(self):
+        """Per-PE/IMN/OMN utilization of the measured execution
+        (``repro.obs.profiler.FabricProfile``) — sim backend only, where a
+        cycle-accurate schedule exists to attribute."""
+        if self.sim is None or self.mapping is None:
+            raise FrontendError("profiling needs a measured simulation "
+                                "(sim backend, single shot)")
+        from repro.obs.profiler import profile_sim
+        return profile_sim(self.mapping, self.sim, length=self.length)
 
     @property
     def cycles(self) -> int:
@@ -204,16 +217,20 @@ class OffloadedFunction:
         ck = self.compile(length)
         inputs = dict(zip(ck.dfg.inputs, arrays))
 
-        if ck.plan.n_shots == 1:
-            outs, info = self._run_single(ck, inputs)
-        else:
-            value_fn = None
-            if self.backend == "pallas":
-                from repro.kernels.fabric_reduce import run_dfg as value_fn
-            runner = ShotRunner(with_timing=True, fabric=self.fabric,
-                                value_fn=value_fn)
-            outs = ck.plan.run(inputs, runner=runner)
-            info = RunInfo(self.backend, ck.plan.n_shots, tally=runner.tally)
+        from repro import obs
+        with obs.span("offload", kernel=self.name, backend=self.backend):
+            if ck.plan.n_shots == 1:
+                outs, info = self._run_single(ck, inputs)
+            else:
+                value_fn = None
+                if self.backend == "pallas":
+                    from repro.kernels.fabric_reduce import run_dfg \
+                        as value_fn
+                runner = ShotRunner(with_timing=True, fabric=self.fabric,
+                                    value_fn=value_fn)
+                outs = ck.plan.run(inputs, runner=runner)
+                info = RunInfo(self.backend, ck.plan.n_shots,
+                               tally=runner.tally, length=length)
         self.last = info
         result = self._pack(ck, outs)
         if self.debug:
@@ -231,7 +248,9 @@ class OffloadedFunction:
             est = ck.artifact.model_cycles(ck.length)
             return outs, RunInfo("pallas", 1, est_cycles=est)
         sim = simulate(ck.mapping, inputs)
-        return dict(sim.outputs), RunInfo("sim", 1, sim=sim)
+        return dict(sim.outputs), RunInfo("sim", 1, sim=sim,
+                                          mapping=ck.mapping,
+                                          length=ck.length)
 
     def _pack(self, ck: CompiledKernel, outs: Dict[str, np.ndarray]):
         import jax

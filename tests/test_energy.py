@@ -24,7 +24,7 @@ from repro.core import kernels_lib as K
 from repro.core import paper_data as PD
 from repro.core.elastic_sim import simulate
 from repro.core.energy import (PowerModel, PowerFeatures, energy_uj,
-                               features_from_sim)
+                               features_from_profile, features_from_sim)
 from repro.core.mapper import map_dfg
 
 rng = np.random.default_rng(11)
@@ -87,6 +87,34 @@ def test_features_row_matches_model_structure():
     assert row == [0.5, 2.0, 1.0, 4.0 * 0.5, 0.25, 1.0]
     # route-PE leakage is gated with the matrix: duty scales that column
     assert dataclasses.replace(f, duty=0.0).row()[3] == 0.0
+
+
+def test_features_from_sim_delegates_through_profiler(paper_samples):
+    """``features_from_sim`` is re-based on the fabric profiler (ISSUE 6):
+    the profiler's firing attribution must reproduce the original direct
+    formula exactly — same activity rates, same route-PE count, same
+    memory rate — so every previously fitted model (and Table I's esave
+    reproduction) is numerically unchanged."""
+    from repro.core import dfg as D
+    from repro.obs.profiler import profile_sim
+
+    for name, m, sim, f in paper_samples:
+        g = m.dfg
+        cycles = max(sim.cycles, 1)
+        arith = sum(cnt for n, cnt in sim.fu_firings.items()
+                    if g.nodes[n].kind == D.ALU) / cycles
+        ctrl = sum(cnt for n, cnt in sim.fu_firings.items()
+                   if g.nodes[n].kind != D.ALU) / cycles
+        assert f.arith_act == arith, name
+        assert f.ctrl_act == ctrl, name
+        assert f.route_pes == m.n_active_pes() - len(m.place), name
+        assert f.mem_rate == sim.bank_beats / cycles, name
+        # the profiler's per-PE rows account for every firing the
+        # simulator recorded — nothing double-counted, nothing dropped
+        p = profile_sim(m, sim)
+        assert p.pe_firings == sum(sim.fu_firings.values()), name
+        assert features_from_profile(p, 1.0, f.cgra_mw_paper,
+                                     f.soc_mw_paper) == f, name
 
 
 # ---------------------------------------------------------------------------

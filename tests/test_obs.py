@@ -1,0 +1,348 @@
+"""repro.obs tests (ISSUE 6): the observability subsystem's contracts.
+
+  * span nesting/ordering — children close before parents, parent ids and
+    depths reconstruct the tree, ring order is completion order;
+  * disabled-mode no-op — a full instrumented Engine flush with obs off
+    writes zero bytes to the ring and materializes no registry, and
+    ``obs.span`` hands back one shared no-op singleton;
+  * histogram percentiles — bit-identical to ``numpy.percentile``;
+  * Chrome-trace export — schema round-trips exactly
+    (``spans_from_chrome(to_chrome(s)) == s``);
+  * fabric profiler — per-resource firing counts bit-consistent with the
+    recorded ``TimingTrace`` on the paper kernels (fft / dither /
+    find2min);
+  * one batched ``Engine.flush`` over >= 3 config classes exports a valid
+    Chrome-trace whose span tree covers compile -> cache -> P&R ->
+    schedule -> dispatch (the ISSUE acceptance criterion);
+  * the ``python -m repro.obs.report`` CLI writes all three export
+    formats.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import kernels_lib as K
+from repro.core.elastic_sim import TimingTrace, simulate
+from repro.core.paper_mappings import paper_mapping
+from repro.obs.profiler import profile_sim, profile_trace
+from repro.obs.trace import NULL_SPAN, spans_from_chrome, to_chrome
+
+rng = np.random.default_rng(7)
+
+
+@pytest.fixture(autouse=True)
+def _obs_off_after():
+    """Every test leaves the process in the disabled default."""
+    yield
+    obs.disable()
+
+
+def _flush_three_classes():
+    """One batched Engine flush over three config classes (relu / vadd /
+    axpby), compiled cold through a memory-only cache."""
+    from repro.engine import ArtifactCache, Engine
+
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    arts = [eng.compile(g) for g in (K.relu(), K.vadd(), K.axpby(3, 5))]
+    for art in arts:
+        for _ in range(2):
+            ins = {k: rng.integers(-64, 64, 32).astype(np.int32)
+                   for k in art.dfg.inputs}
+            eng.submit(art, ins)
+    eng.flush()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# tracing: nesting, ordering, ring behaviour
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_completion_order():
+    obs.enable(fresh=True)
+    with obs.span("outer", kind="test") as so:
+        with obs.span("inner.a"):
+            pass
+        with obs.span("inner.b") as sb:
+            sb.set(extra=1)
+        so.set(n=2)
+    with obs.span("sibling"):
+        pass
+    spans = obs.spans()
+    assert [s.name for s in spans] == ["inner.a", "inner.b", "outer",
+                                      "sibling"]
+    by_name = {s.name: s for s in spans}
+    outer = by_name["outer"]
+    assert outer.parent == 0 and outer.depth == 0      # 0 = root
+    assert by_name["inner.a"].parent == outer.sid
+    assert by_name["inner.b"].parent == outer.sid
+    assert by_name["inner.a"].depth == by_name["inner.b"].depth == 1
+    assert by_name["sibling"].parent == 0
+    # sids are allocated at entry: outer opened before its children
+    assert outer.sid < by_name["inner.a"].sid < by_name["inner.b"].sid
+    # set() attaches attributes to the live span
+    assert outer.attrs == {"kind": "test", "n": 2}
+    assert by_name["inner.b"].attrs == {"extra": 1}
+    # children complete within the parent's interval
+    for child in ("inner.a", "inner.b"):
+        c = by_name[child]
+        assert c.t0_us >= outer.t0_us
+        assert c.t0_us + c.dur_us <= outer.t0_us + outer.dur_us + 1e-6
+        assert c.dur_us >= 0.0
+
+
+def test_ring_buffer_caps_and_counts_drops():
+    obs.enable(capacity=8, fresh=True)
+    for i in range(20):
+        with obs.span(f"s{i}"):
+            pass
+    assert obs.ring_len() == 8
+    assert [s.name for s in obs.spans()] == [f"s{i}" for i in range(12, 20)]
+    assert obs.tracer().dropped == 12
+
+
+# ---------------------------------------------------------------------------
+# disabled mode: the zero-overhead contract
+# ---------------------------------------------------------------------------
+
+def test_disabled_mode_is_a_noop():
+    assert not obs.enabled()
+    assert obs.tracer() is None and obs.registry() is None
+    # every span is the one shared singleton: no allocation per call site
+    s = obs.span("anything", k=1)
+    assert s is NULL_SPAN and s is obs.span("other")
+    with s as h:
+        h.set(ignored=True)        # set() must be callable and inert
+    obs.inc("c")
+    obs.observe("h", 1.0)
+    obs.set_gauge("g", 2.0)
+    assert obs.spans() == [] and obs.ring_len() == 0
+    assert obs.registry() is None
+
+
+def test_disabled_engine_flush_writes_nothing():
+    """The fully instrumented pipeline (compile, cache, P&R, schedule,
+    dispatch, shots) must leave zero observability residue when off."""
+    assert not obs.enabled()
+    eng = _flush_three_classes()
+    assert eng.stats.requests == 6          # the work itself still ran
+    assert obs.ring_len() == 0
+    assert obs.spans() == []
+    assert obs.registry() is None and obs.tracer() is None
+
+
+# ---------------------------------------------------------------------------
+# metrics: registry semantics + percentile math
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_match_numpy():
+    obs.enable(fresh=True)
+    samples = rng.lognormal(3.0, 1.5, 997)
+    for v in samples:
+        obs.observe("lat", v)
+    h = obs.registry().histogram("lat")
+    for p in (0, 10, 50, 90, 99, 99.9, 100):
+        assert h.percentile(p) == float(np.percentile(samples, p)), p
+    assert h.count == 997
+    assert h.sum == pytest.approx(float(samples.sum()))
+    assert h.mean == pytest.approx(float(samples.mean()))
+    assert not h.saturated
+
+
+def test_registry_types_and_exporters(tmp_path):
+    obs.enable(fresh=True)
+    obs.inc("engine.requests", 3)
+    obs.set_gauge("engine.queue_depth", 5)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        obs.observe("engine.request_latency_us", v)
+    reg = obs.registry()
+    with pytest.raises(TypeError):
+        reg.gauge("engine.requests")        # name is bound to Counter
+    prom = reg.to_prometheus()
+    assert "# TYPE strela_engine_requests counter" in prom
+    assert "strela_engine_requests 3" in prom
+    assert "strela_engine_queue_depth 5" in prom
+    assert 'strela_engine_request_latency_us{quantile="0.5"} 2.5' in prom
+    assert "strela_engine_request_latency_us_count 4" in prom
+    path = tmp_path / "metrics.jsonl"
+    reg.dump_jsonl(str(path))
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    by_name = {r["name"]: r for r in rows}
+    assert by_name["engine.requests"] == {"type": "counter",
+                                          "name": "engine.requests",
+                                          "value": 3}
+    assert by_name["engine.request_latency_us"]["p50"] == 2.5
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export: schema + exact round-trip
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema_and_round_trip(tmp_path):
+    obs.enable(fresh=True)
+    with obs.span("compile", kernel="k"):
+        with obs.span("pnr", kernel="k", shots=1):
+            pass
+        with obs.span("cache.lookup", key="abc"):
+            pass
+    with obs.span("schedule.flush", requests=2):
+        with obs.span("dispatch.sim", kernel="k"):
+            pass
+    spans = obs.spans()
+    doc = obs.export_chrome(str(tmp_path / "trace.json"))
+    # the written file is valid JSON and identical to the returned doc
+    assert json.loads((tmp_path / "trace.json").read_text()) == doc
+    evs = doc["traceEvents"]
+    assert len(evs) == len(spans) == 5
+    for ev in evs:
+        assert ev["ph"] == "X" and ev["cat"] == "strela"
+        assert ev["ts"] >= 0 and ev["dur"] >= 0
+        assert {"span_id", "parent_id", "depth"} <= set(ev["args"])
+    assert [e["ts"] for e in evs] == sorted(e["ts"] for e in evs)
+    # exact inverse: every field of every span survives the format
+    assert spans_from_chrome(doc) == sorted(spans, key=lambda s: s.sid)
+    assert spans_from_chrome(to_chrome(spans)) == \
+        sorted(spans, key=lambda s: s.sid)
+
+
+# ---------------------------------------------------------------------------
+# fabric profiler: bit-consistent with the recorded timing data
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["fft", "dither", "find2min"])
+def test_profiler_counts_match_timing_trace(name):
+    """Per-PE occupancy rows must sum to the exact firing counts the
+    TimingTrace recorded — the profiler is attribution, not estimation."""
+    m = paper_mapping(name)
+    g = m.dfg
+    lo, hi = (0, 255) if name == "dither" else (-100, 100)
+    ins = {k: rng.integers(lo, hi, 64).astype(np.int32) for k in g.inputs}
+    sim = simulate(m, ins)
+    trace = TimingTrace.from_sim(sim, 64, (), 4)
+    p = profile_trace(m, trace, kernel=name)
+    assert p.from_trace and p.kernel == name
+    assert p.cycles == trace.cycles == sim.cycles
+    assert p.length == 64 and p.n_banks == 4
+    assert p.bank_beats == trace.bank_beats
+    # bit-consistency: every placed FU's row carries exactly the trace's
+    # firing count, and the aggregate loses nothing
+    rows = {r.name: r for r in p.rows if r.kind == "pe"}
+    assert set(rows) == set(m.place)
+    for n, r in rows.items():
+        assert r.firings == trace.fu_firings.get(n, 0), n
+    assert p.pe_firings == sum(trace.fu_firings.values())
+    # OMN rows deliver exactly the trace's arrival schedule
+    for r in p.rows:
+        if r.kind == "omn":
+            assert r.firings == len(trace.arrival_cycles[r.name]), r.name
+        if r.kind == "imn":
+            assert r.firings == 64
+    # occupancy/bubble arithmetic
+    for r in p.rows:
+        assert r.occupancy == r.firings / p.cycles
+        assert r.bubbles == p.cycles - r.firings
+    assert p.ops_per_cycle == p.pe_firings / p.cycles
+    # a live-sim profile of the same run agrees with the trace profile
+    ps = profile_sim(m, sim, kernel=name, length=64)
+    assert ps.pe_firings == p.pe_firings
+    assert ps.bank_beats == p.bank_beats
+    # the heat-table renders every resource plus bus + bottleneck lines
+    table = p.table()
+    assert name in table and "bottleneck:" in table
+    for r in p.rows:
+        assert r.pos in table
+    label, occ = p.bottleneck()
+    assert 0.0 < occ <= 1.0
+
+
+def test_profiler_steady_ii_matches_sim():
+    m = paper_mapping("fft")
+    ins = {k: rng.integers(-100, 100, 64).astype(np.int32)
+           for k in m.dfg.inputs}
+    sim = simulate(m, ins)
+    p = profile_sim(m, sim, length=64)
+    assert p.steady_ii == sim.steady_ii()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: one batched flush exports the whole pipeline's span tree
+# ---------------------------------------------------------------------------
+
+def test_flush_span_tree_covers_pipeline(tmp_path):
+    obs.enable(fresh=True)
+    eng = _flush_three_classes()
+    spans = obs.spans()
+    names = {s.name for s in spans}
+    assert {"compile", "cache.lookup", "pnr", "config_emit",
+            "schedule.flush", "dispatch.sim", "shot", "shot.values",
+            "shot.simulate"} <= names
+    by_sid = {s.sid: s for s in spans}
+    # three cold compiles, each owning its cache lookup and P&R
+    compiles = [s for s in spans if s.name == "compile"]
+    assert len(compiles) == 3
+    for s in spans:
+        if s.name in ("cache.lookup", "pnr", "config_emit",
+                      "frontend.trace"):
+            assert by_sid[s.parent].name == "compile", s.name
+    # one flush owning all six dispatches, each owning its shot
+    flushes = [s for s in spans if s.name == "schedule.flush"]
+    assert len(flushes) == 1 and flushes[0].attrs["classes"] == 3
+    dispatches = [s for s in spans if s.name == "dispatch.sim"]
+    assert len(dispatches) == 6
+    for s in dispatches:
+        assert by_sid[s.parent].name == "schedule.flush"
+    for s in spans:
+        if s.name == "shot":
+            assert by_sid[s.parent].name == "dispatch.sim"
+        if s.name.startswith("shot."):
+            assert by_sid[s.parent].name == "shot"
+    # the exported Chrome trace is valid JSON and round-trips
+    doc = obs.export_chrome(str(tmp_path / "flush.json"))
+    assert spans_from_chrome(
+        json.loads((tmp_path / "flush.json").read_text())) == \
+        sorted(spans, key=lambda s: s.sid)
+    # metrics recorded the same story
+    reg = obs.registry()
+    assert reg.get("engine.requests").value == 6
+    assert reg.get("compile.cache_misses").value == 3
+    assert reg.get("engine.request_latency_us").count == 6
+    assert reg.get("engine.batch_size").count == 3
+    assert reg.get("engine.stats.requests").value == 6
+    assert reg.get("engine.stats.config_cycles_saved").value == \
+        eng.stats.config_cycles_saved
+
+
+def test_reenable_fresh_clears_previous_run():
+    obs.enable(fresh=True)
+    with obs.span("old"):
+        pass
+    obs.enable(fresh=True)
+    assert obs.spans() == []
+    obs.inc("x")
+    obs.enable(fresh=False)                 # keep: re-entrant enable
+    assert obs.registry().get("x").value == 1
+
+
+# ---------------------------------------------------------------------------
+# the report CLI
+# ---------------------------------------------------------------------------
+
+def test_report_cli_writes_all_exports(tmp_path, capsys):
+    from repro.obs import report
+
+    rc = report.main(["--kernel", "fft", "--kernel", "dither", "--length",
+                      "16", "--requests", "2",
+                      "--chrome-trace", str(tmp_path / "t.json"),
+                      "--metrics", str(tmp_path / "m.prom"),
+                      "--jsonl", str(tmp_path / "m.jsonl")])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "fft:" in out and "dither:" in out and "bottleneck:" in out
+    doc = json.loads((tmp_path / "t.json").read_text())
+    assert {e["name"] for e in doc["traceEvents"]} >= \
+        {"compile", "pnr", "schedule.flush", "dispatch.sim", "shot"}
+    prom = (tmp_path / "m.prom").read_text()
+    assert "strela_engine_requests 4" in prom
+    lines = (tmp_path / "m.jsonl").read_text().splitlines()
+    assert all(json.loads(line)["name"] for line in lines)
