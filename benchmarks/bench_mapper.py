@@ -1,0 +1,183 @@
+"""Mapper benchmark: greedy vs annealed place & route per paper kernel.
+
+For every paper kernel the same DFG is mapped twice — once by the greedy
+first-feasible mapper and once by the simulated-annealing optimizer
+(``core/opt_mapper.py``, seeded and deterministic) — and both mappings
+execute the identical input stream on the cycle-accurate elastic
+simulator. Per (kernel, mapper) row:
+
+  * ``exec_cycles`` / ``steady_ii`` — measured on the bench stream;
+  * ``config_cycles`` / ``config_words`` — the reconfiguration footprint
+    (Sec. V-B: five 32-bit words per active PE), the cost every
+    multi-shot re-arm pays;
+  * ``total_cycles`` — config + exec, the objective the annealer
+    minimizes;
+  * ``pnr_wall_us`` — what the mapping cost to compute.
+
+``main()`` enforces the optimizer's contract on every kernel — annealed
+values bit-exact with greedy, annealed ``total_cycles`` never worse — and
+requires strict improvement on at least ``--min-improved`` kernels
+(CI gates on the default 3). Output: ``BENCH_mapper.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_mapper --length 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import kernels_lib as K
+from repro.core.dfg import DFG
+from repro.core.elastic_sim import simulate
+from repro.core.fabric import Fabric
+from repro.core.isa import config_stream
+from repro.core.mapper import Mapping, generate_configs, map_dfg
+from repro.core.opt_mapper import anneal_map
+
+_KERNELS: Dict[str, Callable[[int], DFG]] = {
+    "fft": lambda n: K.fft_butterfly(),
+    "relu": lambda n: K.relu(),
+    "dither": lambda n: K.dither(),
+    "find2min": lambda n: K.find2min(),
+    "find2min_brmg": lambda n: K.find2min_brmg(),
+    "mac1": lambda n: K.mac1(n),
+    "mac2x": lambda n: K.mac2x(n),
+    "vadd": lambda n: K.vadd(),
+    "axpby": lambda n: K.axpby(3, 5),
+    "conv2d_row": lambda n: K.conv2d_row(1, 2, 1),
+    "outer_row2": lambda n: K.outer_row2(1, 2, 3, 4),
+    "div_loop": lambda n: K.div_loop(7),
+}
+
+
+def _inputs(g: DFG, length: int, rng) -> Dict[str, np.ndarray]:
+    lo, hi = (0, 100) if g.has_recirculation() else (-64, 64)
+    return {name: rng.integers(lo, hi, length).astype(np.int32)
+            for name in g.inputs}
+
+
+def _measure(kname: str, m: Mapping, mapper: str, ins, pnr_wall: float,
+             length: int) -> dict:
+    sim = simulate(m, dict(ins))
+    ii = sim.steady_ii()
+    cfg = m.config_cycles()
+    return {
+        "kernel": kname,
+        "mapper": mapper,
+        "length": length,
+        "steady_ii": None if ii == float("inf") else ii,
+        "exec_cycles": sim.cycles,
+        "config_cycles": cfg,
+        "total_cycles": cfg + sim.cycles,
+        "active_pes": m.n_active_pes(),
+        "config_words": len(config_stream(generate_configs(m))),
+        "pnr_wall_us": pnr_wall * 1e6,
+        "outputs": {k: np.asarray(v).tolist() for k, v in
+                    sim.outputs.items()},
+    }
+
+
+def run(length: int = 64, seed: int = 0, moves: int = None,
+        fabric: Fabric = None) -> List[dict]:
+    fabric = fabric or Fabric()
+    rng = np.random.default_rng(seed)
+    rows: List[dict] = []
+    for kname, factory in _KERNELS.items():
+        g = factory(length)
+        ins = _inputs(g, length, rng)
+
+        t0 = time.perf_counter()
+        greedy = map_dfg(g, fabric, seed=seed, optimize="greedy")
+        wall_greedy = time.perf_counter() - t0
+
+        # the bench stream rides along as a validation probe: the
+        # never-worse guarantee then holds on exactly what we measure
+        t0 = time.perf_counter()
+        annealed = anneal_map(g, fabric, seed=seed, baseline=greedy,
+                              moves=moves, extra_probes=[dict(ins)])
+        wall_anneal = time.perf_counter() - t0
+
+        rows.append(_measure(kname, greedy, "greedy", ins, wall_greedy,
+                             length))
+        rows.append(_measure(kname, annealed, "anneal", ins, wall_anneal,
+                             length))
+    return rows
+
+
+def check(rows: List[dict], min_improved: int = 3) -> List[str]:
+    """Enforce the optimizer contract; returns the improved kernel names."""
+    greedy = {r["kernel"]: r for r in rows if r["mapper"] == "greedy"}
+    improved: List[str] = []
+    for r in rows:
+        if r["mapper"] != "anneal":
+            continue
+        gr = greedy[r["kernel"]]
+        assert r["outputs"] == gr["outputs"], (
+            f"{r['kernel']}: annealed outputs diverged from greedy")
+        assert r["total_cycles"] <= gr["total_cycles"], (
+            f"{r['kernel']}: anneal total {r['total_cycles']} worse than "
+            f"greedy {gr['total_cycles']}")
+        assert r["exec_cycles"] <= gr["exec_cycles"], (
+            f"{r['kernel']}: anneal exec {r['exec_cycles']} worse than "
+            f"greedy {gr['exec_cycles']}")
+        if r["total_cycles"] < gr["total_cycles"]:
+            improved.append(r["kernel"])
+    assert len(improved) >= min_improved, (
+        f"annealer improved only {improved} (need >= {min_improved})")
+    return improved
+
+
+def write_json(rows: List[dict], path: str = "BENCH_mapper.json") -> str:
+    slim = [{k: v for k, v in r.items() if k != "outputs"} for r in rows]
+    with open(path, "w") as f:
+        json.dump({"bench": "mapper", "rows": slim}, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(length: int = 64, seed: int = 0, moves: int = None,
+         json_path: str = "BENCH_mapper.json",
+         min_improved: int = 3) -> List[dict]:
+    rows = run(length=length, seed=seed, moves=moves)
+    greedy = {r["kernel"]: r for r in rows if r["mapper"] == "greedy"}
+    print(f"  greedy vs anneal @ length={length} seed={seed} "
+          f"(total = config + exec cycles)")
+    print(f"  {'kernel':14s} {'total(g)':>9s} {'total(a)':>9s} "
+          f"{'cfg(g)':>7s} {'cfg(a)':>7s} {'PEs':>7s} {'pnr_ms(a)':>10s}")
+    for r in rows:
+        if r["mapper"] != "anneal":
+            continue
+        gr = greedy[r["kernel"]]
+        mark = "  <" if r["total_cycles"] < gr["total_cycles"] else ""
+        print(f"  {r['kernel']:14s} {gr['total_cycles']:9d} "
+              f"{r['total_cycles']:9d} {gr['config_cycles']:7d} "
+              f"{r['config_cycles']:7d} "
+              f"{gr['active_pes']:3d}>{r['active_pes']:<3d} "
+              f"{r['pnr_wall_us'] / 1e3:10.1f}{mark}")
+    improved = check(rows, min_improved=min_improved)
+    print(f"  improved: {', '.join(improved)} "
+          f"({len(improved)}/{len(greedy)} kernels; values bit-exact, "
+          f"never worse)")
+    if json_path:
+        print(f"  wrote {write_json(rows, json_path)}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--length", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--moves", type=int, default=None,
+                    help="anneal move budget (default STRELA_ANNEAL_MOVES "
+                         "or 240)")
+    ap.add_argument("--min-improved", type=int, default=3,
+                    help="fail unless >= this many kernels improved")
+    ap.add_argument("--json", default="BENCH_mapper.json",
+                    help="output path ('' disables)")
+    args = ap.parse_args()
+    main(length=args.length, seed=args.seed, moves=args.moves,
+         json_path=args.json, min_improved=args.min_improved)

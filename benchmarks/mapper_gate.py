@@ -1,0 +1,141 @@
+"""Mapper differential gate: anneal vs greedy over the conformance corpus.
+
+Reuses the seeded random-DFG generator of ``tests/test_conformance.py``
+(the same 230-case population the 5-way conformance gate pins) and, for a
+corpus slice, maps every case twice — greedy and annealed — then asserts
+the optimizer's contract *on the case's own reference workload*:
+
+  * annealed outputs bit-exact with the greedy outputs AND with the
+    case's independent pure-Python reference values;
+  * annealed simulated cycles never worse than greedy;
+  * annealed config footprint never worse than greedy.
+
+Cases the greedy mapper cannot place, and cases whose greedy netlist
+deadlocks (the 2-slot elastic-buffer liveness limit the conformance suite
+documents), are counted as named skips — exactly like the conformance
+gate treats them. A corpus case that anneals to different *values* is a
+correctness bug in the optimizer and fails the gate immediately.
+
+    PYTHONPATH=src python -m benchmarks.mapper_gate --cases 40
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+_TESTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests")
+
+
+def _corpus():
+    """The conformance suite's generator module (tests/ isn't a package)."""
+    if _TESTS_DIR not in sys.path:
+        sys.path.insert(0, _TESTS_DIR)
+    import test_conformance as tc
+    return tc
+
+
+def run(n_cases: int = 40, start: int = 0, seed: int = 1,
+        moves: int = 96, verbose: bool = True) -> dict:
+    from repro.core.elastic_sim import simulate
+    from repro.core.mapper import MappingError, map_dfg
+    from repro.core.opt_mapper import anneal_map
+
+    tc = _corpus()
+    stats = {"verified": 0, "improved_cycles": 0, "improved_config": 0,
+             "skip_unmappable": 0, "skip_deadlock": 0,
+             "cycles_saved": 0, "config_cycles_saved": 0}
+    t0 = time.perf_counter()
+    for i in range(start, start + n_cases):
+        length = (8, 16, 24)[i % 3]
+        g, inputs, refs = tc._mk_case(i, length)
+        try:
+            # the conformance suite's exact greedy P&R call
+            greedy = map_dfg(g, restarts=60, seed=seed, optimize="greedy")
+        except MappingError:
+            stats["skip_unmappable"] += 1
+            continue
+        try:
+            gsim = simulate(greedy, dict(inputs))
+        except RuntimeError as e:
+            if "deadlock" in str(e):
+                stats["skip_deadlock"] += 1
+                continue
+            raise
+        annealed = anneal_map(g, seed=seed, baseline=greedy, moves=moves,
+                              extra_probes=[dict(inputs)])
+        asim = simulate(annealed, dict(inputs))
+
+        assert set(asim.outputs) == set(gsim.outputs), (
+            f"case {i} ({g.name}): annealed output set diverged")
+        for o, want in gsim.outputs.items():
+            got = asim.outputs[o]
+            assert np.array_equal(got, want), (
+                f"case {i} ({g.name}): annealed values diverged from "
+                f"greedy on {o}: {got.tolist()[:8]} != {want.tolist()[:8]}")
+            if o in refs:
+                assert got.tolist() == refs[o], (
+                    f"case {i} ({g.name}): annealed values diverged from "
+                    f"the pure-Python reference on {o}")
+        assert asim.cycles <= gsim.cycles, (
+            f"case {i} ({g.name}): annealed cycles {asim.cycles} worse "
+            f"than greedy {gsim.cycles}")
+        assert annealed.config_cycles() <= greedy.config_cycles(), (
+            f"case {i} ({g.name}): annealed config "
+            f"{annealed.config_cycles()} worse than greedy "
+            f"{greedy.config_cycles()}")
+
+        stats["verified"] += 1
+        if asim.cycles < gsim.cycles:
+            stats["improved_cycles"] += 1
+            stats["cycles_saved"] += gsim.cycles - asim.cycles
+        if annealed.config_cycles() < greedy.config_cycles():
+            stats["improved_config"] += 1
+            stats["config_cycles_saved"] += \
+                greedy.config_cycles() - annealed.config_cycles()
+        if verbose:
+            mark = ""
+            if annealed.config_cycles() < greedy.config_cycles():
+                mark = (f"  cfg {greedy.config_cycles()}->"
+                        f"{annealed.config_cycles()}")
+            if asim.cycles < gsim.cycles:
+                mark += f"  cyc {gsim.cycles}->{asim.cycles}"
+            print(f"  case {i:3d} {g.name:8s} len={length:2d} ok{mark}")
+    stats["wall_s"] = time.perf_counter() - t0
+    return stats
+
+
+def main(argv: List[str] = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--cases", type=int, default=40,
+                    help="corpus slice size (seeds start..start+cases)")
+    ap.add_argument("--start", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=1,
+                    help="P&R seed (the conformance suite uses 1)")
+    ap.add_argument("--moves", type=int, default=96,
+                    help="anneal move budget per case (small on purpose: "
+                         "the gate checks the contract, not peak gains)")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    stats = run(n_cases=args.cases, start=args.start, seed=args.seed,
+                moves=args.moves, verbose=not args.quiet)
+    print(f"  mapper-gate: {stats['verified']} verified "
+          f"(values bit-exact vs greedy + reference, cycles/config never "
+          f"worse), {stats['improved_config']} config-improved "
+          f"(-{stats['config_cycles_saved']} cycles), "
+          f"{stats['improved_cycles']} cycle-improved "
+          f"(-{stats['cycles_saved']}), "
+          f"{stats['skip_unmappable']} unmappable, "
+          f"{stats['skip_deadlock']} deadlocked "
+          f"[{stats['wall_s']:.1f}s]")
+    assert stats["verified"] > 0, "gate verified nothing"
+    return stats
+
+
+if __name__ == "__main__":
+    main()

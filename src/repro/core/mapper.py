@@ -13,6 +13,8 @@ provide the south-to-north return paths for feedback signals.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
 import random
 from collections import deque
 from typing import Dict, List, Optional, Set, Tuple
@@ -24,6 +26,25 @@ from repro.core.isa import (AluOp, CmpOp, CtrlSel, JoinMergeMode, OperandSel,
 
 Signal = Tuple[str, str]          # (node name, out port)  e.g. ("c1","out")
 FU_PORT_OF = {"a": "FU_A", "b": "FU_B", "ctrl": "FU_C"}
+
+MAPPERS = ("greedy", "anneal")
+
+
+def default_seed() -> int:
+    """The mapper RNG seed: ``STRELA_MAP_SEED`` in the environment, else 0.
+
+    Read at call time (not import) so tests and CI steps can re-seed
+    without re-importing; every ``map_dfg``/annealer entry point resolves
+    ``seed=None`` through this one function."""
+    return int(os.environ.get("STRELA_MAP_SEED", "0"))
+
+
+def default_mapper() -> str:
+    """Mapper selection: ``STRELA_MAPPER`` in the environment, else greedy."""
+    m = os.environ.get("STRELA_MAPPER", "greedy")
+    if m not in MAPPERS:
+        raise ValueError(f"STRELA_MAPPER must be one of {MAPPERS}, got {m!r}")
+    return m
 
 
 @dataclasses.dataclass
@@ -88,6 +109,28 @@ class Mapping:
 
     def n_mem_nodes(self) -> int:
         return len(self.imn_of) + len(self.omn_of)
+
+    def digest(self) -> str:
+        """Stable content hash of the mapping decision (placement, stream
+        bindings, and every claimed route edge). Two mappings with equal
+        digests configure the fabric identically — the determinism tests
+        compare this across processes, and it is independent of memo
+        fields and dict insertion order."""
+        h = hashlib.sha1()
+        for n in sorted(self.place):
+            h.update(f"P|{n}|{self.place[n]}".encode())
+        for n in sorted(self.imn_of):
+            h.update(f"I|{n}|{self.imn_of[n]}".encode())
+        for n in sorted(self.omn_of):
+            h.update(f"O|{n}|{self.omn_of[n]}".encode())
+        for sig in sorted(self.routes):
+            route = self.routes[sig]
+            edges = sorted((repr(res), repr(par))
+                           for res, par in route.parent.items())
+            h.update(f"R|{sig}|{edges}".encode())
+        for key in sorted(self.edge_dest):
+            h.update(f"D|{key}|{self.edge_dest[key]!r}".encode())
+        return h.hexdigest()
 
 
 class MappingError(RuntimeError):
@@ -286,28 +329,50 @@ def map_dfg(g: D.DFG, fabric: Optional[Fabric] = None,
             hints: Optional[Dict[str, Tuple[int, int]]] = None,
             imn_hint: Optional[Dict[str, int]] = None,
             omn_hint: Optional[Dict[str, int]] = None,
-            seed: int = 0, restarts: int = 400) -> Mapping:
+            seed: Optional[int] = None, restarts: int = 400,
+            optimize: Optional[str] = None) -> Mapping:
     """Place & route ``g``; raises MappingError if no mapping is found.
 
     ``hints`` pins functional nodes to PEs and ``imn_hint``/``omn_hint`` pin
     the stream-to-memory-node binding — used to reproduce the paper's manual
     mappings (Fig. 7) deterministically.
+
+    ``seed`` (default: ``STRELA_MAP_SEED``, else 0) seeds the single RNG
+    driving restart jitter and route tie-breaking — the same seed always
+    yields a bit-identical ``Mapping``. ``optimize`` selects the mapper
+    (default: ``STRELA_MAPPER``, else greedy): ``"anneal"`` refines the
+    greedy mapping with the cost-driven simulated annealer
+    (``core.opt_mapper``), guaranteed never cycle-worse. Pinned mappings
+    (any hint given) always stay greedy — they *are* the answer.
     """
     fabric = fabric or Fabric()
+    seed = default_seed() if seed is None else seed
+    optimize = default_mapper() if optimize is None else optimize
+    if optimize not in MAPPERS:
+        raise ValueError(f"optimize must be one of {MAPPERS}, "
+                         f"got {optimize!r}")
     if len(g.inputs) > fabric.n_imns:
         raise MappingError(f"{g.name}: {len(g.inputs)} inputs > {fabric.n_imns} IMNs")
     if len(g.outputs) > fabric.n_omns:
         raise MappingError(f"{g.name}: {len(g.outputs)} outputs > {fabric.n_omns} OMNs")
     rng = random.Random(seed)
     last_err: Optional[str] = None
+    greedy: Optional[Mapping] = None
     for attempt in range(restarts):
         temp = attempt / max(restarts - 1, 1)      # 0 → deterministic greedy,
         try:                                       # 1 → near-random search
-            return _try_map(g, fabric, hints, imn_hint, omn_hint, rng, temp=temp)
+            greedy = _try_map(g, fabric, hints, imn_hint, omn_hint, rng,
+                              temp=temp)
+            break
         except MappingError as e:
             last_err = str(e)
-    raise MappingError(f"{g.name}: no feasible mapping after {restarts} restarts "
-                       f"(last: {last_err})")
+    if greedy is None:
+        raise MappingError(f"{g.name}: no feasible mapping after {restarts} "
+                           f"restarts (last: {last_err})")
+    if optimize == "anneal" and not (hints or imn_hint or omn_hint):
+        from repro.core.opt_mapper import anneal_map
+        return anneal_map(g, fabric, seed=seed, baseline=greedy)
+    return greedy
 
 
 def _try_map(g, fabric, hints, imn_hint, omn_hint, rng, temp: float) -> Mapping:
@@ -375,6 +440,28 @@ def _try_map(g, fabric, hints, imn_hint, omn_hint, rng, temp: float) -> Mapping:
         free.discard(best)
 
     # ---- routing (negotiated congestion over all signals at once) ----
+    routes, edge_dest = route_signals(g, fabric, place, imn_of, omn_of, rng,
+                                      depth=depth)
+    return Mapping(g, fabric, place, imn_of, omn_of, routes, edge_dest)
+
+
+def route_signals(g: D.DFG, fabric: Fabric,
+                  place: Dict[str, Tuple[int, int]],
+                  imn_of: Dict[str, int], omn_of: Dict[str, int],
+                  rng: random.Random,
+                  depth: Optional[Dict[str, int]] = None
+                  ) -> Tuple[Dict[Signal, Route],
+                             Dict[Tuple[str, str, str, str], Res]]:
+    """Route every signal of ``g`` for a *fixed* placement + stream binding.
+
+    This is the routing half of ``_try_map``, shared with the annealing
+    mapper (``core.opt_mapper``), whose moves mutate the placement and then
+    re-route. Demand order and RNG consumption are identical to the greedy
+    path, so the same (placement, rng state) always reproduces the same
+    routes. Raises MappingError when congestion cannot be resolved."""
+    if depth is None:
+        depth = _depths(g)
+
     def source_res(sig: Signal) -> Res:
         node, port = sig
         kind = g.nodes[node].kind
@@ -404,7 +491,7 @@ def _try_map(g, fabric, hints, imn_hint, omn_hint, rng, temp: float) -> Mapping:
 
     demands = [(sig, source_res(sig), sinks_of[sig]) for sig in order]
     routes = _NegotiatedRouter(fabric, rng).route_all(demands)
-    return Mapping(g, fabric, place, imn_of, omn_of, routes, edge_dest)
+    return routes, edge_dest
 
 
 # ---------------------------------------------------------------------------

@@ -44,7 +44,10 @@ from repro.core.multishot import rearm_cycles
 #     see engine/capabilities.py) so every dispatch layer validates against
 #     the declared per-backend capability matrix instead of ad-hoc
 #     ``backend == "pallas"`` special cases.
-SCHEMA_VERSION = 4
+# v5: cache digests key on mapper identity + P&R seed and artifacts carry
+#     ``mapper`` ("greedy" | "anneal", core/opt_mapper.py) — greedy and
+#     annealed compilations of the same kernel must never alias on disk.
+SCHEMA_VERSION = 5
 
 # key of one recorded trace: (shot/config key, length, layout, n_banks)
 TraceKey = Tuple[str, int, Tuple[int, ...], int]
@@ -77,6 +80,8 @@ class CompiledArtifact:
     # capability features this kernel requires of its execution substrate
     # (sorted flags from engine/capabilities.py, computed at compile time)
     features: Tuple[str, ...] = ()
+    # which place & route produced the plan's mappings ("greedy" | "anneal")
+    mapper: str = "greedy"
     schema: int = SCHEMA_VERSION
 
     # -- structure ---------------------------------------------------------

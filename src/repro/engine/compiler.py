@@ -30,7 +30,7 @@ from repro import obs
 from repro.core import dfg as D
 from repro.core.fabric import Fabric
 from repro.core.isa import config_stream
-from repro.core.mapper import generate_configs
+from repro.core.mapper import default_mapper, default_seed, generate_configs
 from repro.engine.artifact import (SCHEMA_VERSION, ArtifactError,
                                    CompiledArtifact, Geometry)
 from repro.engine.cache import ArtifactCache, default_cache
@@ -41,15 +41,19 @@ def geometry_of(fabric: Fabric) -> Geometry:
 
 
 def dfg_digest(g: D.DFG, geometry: Geometry, backend: str,
-               pe_limit: Optional[int] = None) -> str:
+               pe_limit: Optional[int] = None, mapper: str = "greedy",
+               seed: int = 0) -> str:
     """Content digest of a DFG compile request. Node names participate (a
     Mapping's placement is keyed by node name, so structural equality alone
     would alias artifacts whose mappings don't transfer). ``pe_limit``
     changes the partition plan, so it keys too; ``restarts`` is a search
-    budget, not a semantic input, and deliberately does not."""
+    budget, not a semantic input, and deliberately does not. The *mapper
+    identity and seed* DO key: greedy and annealed compilations of the same
+    DFG produce different mappings, and the on-disk cache must never serve
+    one where the other was requested."""
     h = hashlib.sha1()
     h.update(f"v{SCHEMA_VERSION}|{g.name}|{geometry}|{backend}|"
-             f"{pe_limit}".encode())
+             f"{pe_limit}|{mapper}|{seed}".encode())
     for name in sorted(g.nodes):
         n = g.nodes[name]
         op = int(n.op) if n.op is not None else -1
@@ -65,7 +69,8 @@ def dfg_digest(g: D.DFG, geometry: Geometry, backend: str,
 
 def fn_cache_key(fn: Callable, length: int, mode: str, backend: str,
                  geometry: Geometry, arg_names: List[str],
-                 pe_limit: Optional[int] = None) -> Tuple[str, Any, bool]:
+                 pe_limit: Optional[int] = None, mapper: str = "greedy",
+                 seed: int = 0) -> Tuple[str, Any, bool]:
     """(digest, jax out_shape, element_mode) for a traced-function compile.
 
     Mirrors the tracer's mode resolution so the recorded output shapes
@@ -93,7 +98,7 @@ def fn_cache_key(fn: Callable, length: int, mode: str, backend: str,
     consts = [np.asarray(c).tolist() for c in closed.consts]
     digest = hashlib.sha1(
         f"v{SCHEMA_VERSION}|{closed.jaxpr}|{consts}|{length}|{geometry}|"
-        f"{backend}|{pe_limit}".encode()).hexdigest()
+        f"{backend}|{pe_limit}|{mapper}|{seed}".encode()).hexdigest()
     return digest, out_shape, element_mode
 
 
@@ -102,7 +107,9 @@ def build_artifact(g: D.DFG, key: str, fabric: Fabric, backend: str,
                    element_mode: bool = False,
                    out_shapes: Optional[List[Tuple[int, ...]]] = None,
                    restarts: int = 200,
-                   pe_limit: Optional[int] = None) -> CompiledArtifact:
+                   pe_limit: Optional[int] = None,
+                   mapper: Optional[str] = None,
+                   seed: Optional[int] = None) -> CompiledArtifact:
     """Partition + place & route + config-word emission (no cache I/O).
 
     The plan's required capability features are computed here and checked
@@ -113,8 +120,11 @@ def build_artifact(g: D.DFG, key: str, fabric: Fabric, backend: str,
     from repro.engine import capabilities
     from repro.frontend import partition
     name = name or g.name
-    with obs.span("pnr", kernel=name, backend=backend) as sp:
-        pl = partition.plan(g, fabric, restarts=restarts, pe_limit=pe_limit)
+    mapper = default_mapper() if mapper is None else mapper
+    seed = default_seed() if seed is None else seed
+    with obs.span("pnr", kernel=name, backend=backend, mapper=mapper) as sp:
+        pl = partition.plan(g, fabric, restarts=restarts, pe_limit=pe_limit,
+                            mapper=mapper, seed=seed)
         sp.set(shots=pl.n_shots)
     features = capabilities.plan_features(pl)
     capabilities.check_backend(features, backend, name)
@@ -134,28 +144,35 @@ def build_artifact(g: D.DFG, key: str, fabric: Fabric, backend: str,
         name=name, key=key, backend=backend, geometry=geometry_of(fabric),
         plan=pl, config_words=words, config_class=config_class,
         length=length, element_mode=element_mode, out_shapes=out_shapes,
-        features=tuple(sorted(features)))
+        features=tuple(sorted(features)), mapper=mapper)
 
 
 def compile(fn_or_dfg: Union[Callable, D.DFG], length: Optional[int] = None,
             *, fabric: Optional[Fabric] = None, backend: str = "sim",
             mode: str = "auto", name: Optional[str] = None,
             cache: Optional[ArtifactCache] = None, restarts: int = 200,
-            pe_limit: Optional[int] = None) -> CompiledArtifact:
+            pe_limit: Optional[int] = None, mapper: Optional[str] = None,
+            seed: Optional[int] = None) -> CompiledArtifact:
     """Compile a kernel into a cached, runnable ``CompiledArtifact``.
 
     ``length`` is required for callables (the traced stream extent) and
-    ignored for DFGs, whose mappings are length-independent.
+    ignored for DFGs, whose mappings are length-independent. ``mapper``
+    selects place & route ("greedy" | "anneal", default from
+    ``STRELA_MAPPER``) and ``seed`` the P&R RNG stream (default from
+    ``STRELA_MAP_SEED``); both key the artifact digest.
     """
     fabric = fabric or Fabric()
     cache = cache if cache is not None else default_cache()
     geometry = geometry_of(fabric)
+    mapper = default_mapper() if mapper is None else mapper
+    seed = default_seed() if seed is None else seed
 
     if isinstance(fn_or_dfg, D.DFG):
         g = fn_or_dfg
         with obs.span("compile", kernel=name or g.name,
                       backend=backend) as sp:
-            key = dfg_digest(g, geometry, backend, pe_limit)
+            key = dfg_digest(g, geometry, backend, pe_limit,
+                             mapper=mapper, seed=seed)
             with obs.span("cache.lookup", key=key[:12]):
                 hit = cache.get(key)
             if hit is not None:
@@ -164,7 +181,8 @@ def compile(fn_or_dfg: Union[Callable, D.DFG], length: Optional[int] = None,
                 return hit
             obs.inc("compile.cache_misses")
             art = build_artifact(g, key, fabric, backend, name=name,
-                                 restarts=restarts, pe_limit=pe_limit)
+                                 restarts=restarts, pe_limit=pe_limit,
+                                 mapper=mapper, seed=seed)
             cache.put(art)
             return art
 
@@ -181,7 +199,8 @@ def compile(fn_or_dfg: Union[Callable, D.DFG], length: Optional[int] = None,
         arg_names = [p.name for p in inspect.signature(fn).parameters.values()
                      if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
         key, out_shape, element_mode = fn_cache_key(
-            fn, length, mode, backend, geometry, arg_names, pe_limit)
+            fn, length, mode, backend, geometry, arg_names, pe_limit,
+            mapper=mapper, seed=seed)
         with obs.span("cache.lookup", key=key[:12]):
             hit = cache.get(key)
         if hit is not None:
@@ -198,6 +217,6 @@ def compile(fn_or_dfg: Union[Callable, D.DFG], length: Optional[int] = None,
         art = build_artifact(g, key, fabric, backend, name=kname,
                              length=length, element_mode=element_mode,
                              out_shapes=shapes, restarts=restarts,
-                             pe_limit=pe_limit)
+                             pe_limit=pe_limit, mapper=mapper, seed=seed)
         cache.put(art)
         return art

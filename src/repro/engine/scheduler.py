@@ -135,7 +135,8 @@ class Engine:
     def __init__(self, fabric: Optional[Fabric] = None, backend: str = "sim",
                  with_timing: bool = True,
                  runner: Optional[ShotRunner] = None,
-                 cache: Optional[ArtifactCache] = None):
+                 cache: Optional[ArtifactCache] = None,
+                 mapper: Optional[str] = None):
         if backend not in capabilities.CAPS:
             raise ValueError(f"backend must be one of "
                              f"{capabilities.BACKENDS}, got {backend!r}")
@@ -153,6 +154,9 @@ class Engine:
         self._value_fn = _pallas_value_fn if backend == "pallas" else execute
         self.backend = backend
         self.cache = cache if cache is not None else default_cache()
+        # None = resolve per compile from STRELA_MAPPER (so one Engine can
+        # follow the env); a concrete value pins every compile it issues
+        self.mapper = mapper
         self.stats = EngineStats()
         self._queue: List[Handle] = []
 
@@ -162,6 +166,8 @@ class Engine:
         kw.setdefault("fabric", self.fabric)
         kw.setdefault("backend", self.backend)
         kw.setdefault("cache", self.cache)
+        if self.mapper is not None:
+            kw.setdefault("mapper", self.mapper)
         return compiler.compile(fn_or_dfg, length, **kw)
 
     # -- dispatch ----------------------------------------------------------

@@ -286,16 +286,32 @@ def _build_shot_dfg(g: D.DFG, members: Sequence[str], idx: int,
 # ---------------------------------------------------------------------------
 
 def plan(g: D.DFG, fabric: Optional[Fabric] = None, restarts: int = 200,
-         pe_limit: Optional[int] = None) -> Plan:
-    """Decompose ``g`` into mappable shots (a single shot when it fits)."""
+         pe_limit: Optional[int] = None, mapper: Optional[str] = None,
+         seed: Optional[int] = None) -> Plan:
+    """Decompose ``g`` into mappable shots (a single shot when it fits).
+
+    The shot-shedding *search* always maps greedily — feasibility probing
+    must stay cheap — and when ``mapper`` resolves to ``"anneal"``
+    (``STRELA_MAPPER``), only the finally-accepted shot mappings are
+    annealed, each with its greedy mapping as the never-worse baseline."""
+    from repro.core.mapper import default_mapper, default_seed
     fabric = fabric or Fabric()
     pe_limit = pe_limit if pe_limit is not None else fabric.rows * fabric.cols
+    mapper = default_mapper() if mapper is None else mapper
+    seed = default_seed() if seed is None else seed
+
+    def _finalize(shot_g: D.DFG, m):
+        if mapper == "anneal":
+            from repro.core.opt_mapper import anneal_map
+            return anneal_map(shot_g, fabric, seed=seed, baseline=m)
+        return m
 
     # fast path: the whole graph in one shot
     if (len(g.inputs) <= fabric.n_imns and len(g.outputs) <= fabric.n_omns
             and g.n_pes_used() <= pe_limit):
         try:
-            m = map_dfg(g, fabric, restarts=restarts)
+            m = _finalize(g, map_dfg(g, fabric, seed=seed, restarts=restarts,
+                                     optimize="greedy"))
             shot = Shot(key=g.name, dfg=g, mapping=m,
                         inputs=[(n, (n, "out")) for n in g.inputs],
                         outputs=[(o, ("final", o)) for o in g.outputs],
@@ -327,7 +343,8 @@ def plan(g: D.DFG, fabric: Optional[Fabric] = None, restarts: int = 200,
             try:
                 shot_g, s_ins, s_outs, s_finals = _build_shot_dfg(
                     g, members, len(shots), rate)
-                m = map_dfg(shot_g, fabric, restarts=restarts)
+                m = map_dfg(shot_g, fabric, seed=seed, restarts=restarts,
+                            optimize="greedy")
                 break
             except (FrontendError, MappingError) as e:
                 if j - 1 <= i:
@@ -336,7 +353,8 @@ def plan(g: D.DFG, fabric: Optional[Fabric] = None, restarts: int = 200,
                         f"decomposition at one cluster ({members}): {e}"
                     ) from e
                 j -= 1
-        shots.append(Shot(key=shot_g.name, dfg=shot_g, mapping=m,
+        shots.append(Shot(key=shot_g.name, dfg=shot_g, mapping=_finalize(
+                              shot_g, m),
                           inputs=s_ins, outputs=s_outs, finals=s_finals))
         i = j
 

@@ -140,6 +140,27 @@ def test_cache_key_distinguishes_geometry_and_backend():
     assert len({a44.key, a33.key, ap.key}) == 3
 
 
+def test_cache_key_distinguishes_mapper_and_seed():
+    """Greedy and annealed compilations of one kernel — or two P&R seeds —
+    must never alias in the cache (the mapping decision differs even
+    though the DFG is identical)."""
+    from repro.engine.compiler import dfg_digest, geometry_of
+    g = K.relu()
+    geo = geometry_of(Fabric())
+    keys = {dfg_digest(g, geo, "sim", mapper="greedy", seed=0),
+            dfg_digest(g, geo, "sim", mapper="anneal", seed=0),
+            dfg_digest(g, geo, "sim", mapper="greedy", seed=1)}
+    assert len(keys) == 3
+    cache = ArtifactCache(memory_only=True)
+    eng = Engine(cache=cache)
+    a_greedy = eng.compile(g, mapper="greedy", seed=0)
+    a_anneal = eng.compile(g, mapper="anneal", seed=0)
+    assert a_greedy.key != a_anneal.key
+    assert (a_greedy.mapper, a_anneal.mapper) == ("greedy", "anneal")
+    # round-trip through the cache preserves the mapper identity
+    assert cache.get(a_anneal.key).mapper == "anneal"
+
+
 def test_cache_key_distinguishes_pe_limit():
     """A pe_limit compile must not be served an unrestricted artifact."""
     eng = Engine(cache=ArtifactCache(memory_only=True))

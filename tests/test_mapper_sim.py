@@ -143,3 +143,68 @@ def test_auto_unroll_reproduces_paper_factors():
     assert f >= 2, f                    # paper: x2
     m, f = auto_unroll(K.fft_butterfly(), max_factor=4, restarts=10)
     assert f == 1                       # 4 inputs -> no headroom
+
+
+# ---------------------------------------------------------------------------
+# P&R determinism (seeded RNG) and mapping cost accessors
+# ---------------------------------------------------------------------------
+
+def test_map_dfg_seed_determinism_in_process():
+    g = K.fft_butterfly()
+    a = map_dfg(g, seed=11, restarts=60)
+    b = map_dfg(g, seed=11, restarts=60)
+    assert a.digest() == b.digest()
+    # a different seed is allowed to differ, but must still map & verify
+    c = map_dfg(g, seed=12, restarts=60)
+    assert c.n_active_pes() <= 16
+
+
+def test_map_dfg_seed_determinism_across_processes():
+    """Same seed => bit-identical mapping in a fresh interpreter (no
+    hidden module-level RNG state participates in P&R)."""
+    import subprocess
+    import sys
+    code = (
+        "from repro.core import kernels_lib as K\n"
+        "from repro.core.mapper import map_dfg\n"
+        "print(map_dfg(K.fft_butterfly(), seed=11, restarts=60).digest())\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], check=True,
+                         capture_output=True, text=True)
+    here = map_dfg(K.fft_butterfly(), seed=11, restarts=60).digest()
+    assert out.stdout.strip() == here
+
+
+def test_strela_map_seed_env_default(monkeypatch):
+    g = K.axpby(3, 5)
+    monkeypatch.setenv("STRELA_MAP_SEED", "7")
+    from_env = map_dfg(g, restarts=60)
+    explicit = map_dfg(g, seed=7, restarts=60)
+    assert from_env.digest() == explicit.digest()
+
+
+# hand-counted against the kernel structure: fft = radix-2 butterfly of 10
+# ALUs (Fig. 7b, every PE used); relu = CMP+MUX; dither = 3 ALU + CMP with
+# the error-feedback loop; find2min = 1 ALU + 2 CMP + 6 MUX; the _brmg
+# variant replaces the MUX tree with 4 BRANCH + 3 MERGE; x3/c2 unrolls
+# triple/double the per-lane counts. config = 5 words/PE + 4 (Sec. V-B).
+@pytest.mark.parametrize("name,arith,ctrl,active,cfg,mem", [
+    ("fft", 10, 0, 16, 84, 8),
+    ("relu", 0, 2, 4, 24, 2),
+    ("relu_x3", 0, 6, 15, 79, 6),
+    ("dither", 3, 1, 4, 24, 2),
+    ("dither_c2", 6, 2, 10, 54, 4),
+    ("find2min", 1, 8, 15, 79, 5),
+    ("find2min_brmg", 0, 9, 11, 59, 3),
+])
+def test_mapping_cost_accessors_hand_counted(name, arith, ctrl, active,
+                                             cfg, mem):
+    m = paper_mapping(name)
+    assert m.arithmetic_pes() == arith
+    assert m.control_pes() == ctrl
+    assert m.n_active_pes() == active
+    assert m.config_cycles() == cfg
+    assert m.n_mem_nodes() == mem
+    # the identity the annealer's cost model relies on
+    from repro.core.isa import config_cycles
+    assert m.config_cycles() == config_cycles(m.n_active_pes())

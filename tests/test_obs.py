@@ -313,6 +313,47 @@ def test_flush_span_tree_covers_pipeline(tmp_path):
         eng.stats.config_cycles_saved
 
 
+def test_anneal_span_and_counters():
+    """The optimizing mapper narrates its search: one ``pnr.anneal`` span
+    with outcome attributes, plus moves/temperature/validation counters."""
+    obs.enable(fresh=True)
+    from repro.core.mapper import map_dfg
+    from repro.core.opt_mapper import anneal_map
+
+    g = K.axpby(3, 5)
+    greedy = map_dfg(g, seed=0, optimize="greedy")
+    anneal_map(g, seed=0, baseline=greedy, moves=48)
+    spans = [s for s in obs.spans() if s.name == "pnr.anneal"]
+    assert len(spans) == 1
+    sp = spans[0]
+    assert sp.attrs["kernel"] == g.name
+    assert sp.attrs["tried"] > 0
+    assert sp.attrs["accepted"] >= 0
+    assert "adopted" in sp.attrs and "score_delta" in sp.attrs
+    reg = obs.registry()
+    assert reg.get("pnr.anneal.moves_tried").value == sp.attrs["tried"]
+    assert reg.get("pnr.anneal.moves_accepted").value == \
+        sp.attrs["accepted"]
+    assert reg.get("pnr.anneal.temp_steps").value > 0
+
+
+def test_anneal_compile_nests_under_pnr_span():
+    """Compiling with mapper="anneal" shows the anneal span inside the
+    compile's ``pnr`` span — the pipeline trace stays one tree."""
+    obs.enable(fresh=True)
+    from repro.engine import ArtifactCache, Engine
+
+    eng = Engine(cache=ArtifactCache(memory_only=True), mapper="anneal")
+    eng.compile(K.axpby(3, 5))
+    spans = obs.spans()
+    by_sid = {s.sid: s for s in spans}
+    pnr = [s for s in spans if s.name == "pnr"]
+    assert len(pnr) == 1 and pnr[0].attrs["mapper"] == "anneal"
+    anneals = [s for s in spans if s.name == "pnr.anneal"]
+    assert len(anneals) == 1
+    assert by_sid[anneals[0].parent].name == "pnr"
+
+
 def test_reenable_fresh_clears_previous_run():
     obs.enable(fresh=True)
     with obs.span("old"):
