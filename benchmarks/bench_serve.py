@@ -1,0 +1,195 @@
+"""Serving benchmark: throughput and tail latency vs offered load.
+
+Drives :class:`repro.serve.ServeEngine` under the deterministic virtual
+clock with seeded open-loop Poisson traffic at several offered-load
+points (fractions of the calibrated service capacity), on both backends.
+Each row reports throughput, p50/p99 latency, admission outcomes, and the
+config-cycle ledger — ``config_cycles_paid`` (what the continuous batcher
+actually spent on reconfiguration) vs ``config_cycles_naive`` (what
+per-request ``Engine.run`` dispatch would have paid). The acceptance
+claim of ISSUE 8 is asserted here: at the highest offered load the
+continuous batcher is **strictly cheaper in config cycles than naive**
+(that is the paper's reconfiguration-amortization story applied to
+traffic, Sec. IV-B).
+
+Everything is a pure function of the seed: the rows embed each run's
+``trace_digest`` so two machines producing the same BENCH_serve.json can
+be diffed decision-for-decision.
+
+Backends: sim rows use the full class mix (short kernels, reduction,
+multi-shot plan, irregular loop); pallas rows drop the loop class (loop
+state is sim-only per the capability matrix) and use a smaller request
+count because interpret mode executes on the CPU interpreter. Timing
+columns are virtual-clock microseconds — modeled fabric cycles, not host
+wall time — so they are machine-independent on both backends.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --requests 200
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.engine import ArtifactCache, Engine
+from repro.serve import (ServeConfig, ServeEngine, bursty_arrival_times,
+                         make_requests, poisson_arrival_times,
+                         request_inputs, serve_classes)
+
+# offered load as a fraction of calibrated single-server capacity:
+# under-loaded (batching must not hurt latency), saturated, and
+# over-driven (admission control + batching must hold the line)
+LOAD_POINTS: Tuple[float, ...] = (0.25, 1.0, 3.0)
+
+
+def _fresh_engine(backend: str) -> Engine:
+    return Engine(backend=backend, cache=ArtifactCache(memory_only=True))
+
+
+def calibrate(backend: str, length: int,
+              include_loops: bool) -> Tuple[float, Dict[str, object]]:
+    """Mean modeled service time (us/request) of the class mix, measured
+    by one naive dispatch per class on a throwaway engine."""
+    eng = _fresh_engine(backend)
+    classes = serve_classes(eng, length, include_loops=include_loops)
+    rng = np.random.default_rng(0)
+    before = eng.tally.total
+    for art in classes.values():
+        eng.run(art, request_inputs(art, length, rng))
+    cycles = eng.tally.total - before
+    cfg = ServeConfig()
+    return (cycles / len(classes)) * cfg.us_per_cycle, classes
+
+
+def soak(seed: int, n_requests: int, length: int = 64,
+         backend: str = "sim", rate_per_us: Optional[float] = None,
+         config: Optional[ServeConfig] = None,
+         include_loops: Optional[bool] = None,
+         bursty: bool = False) -> Tuple[ServeEngine, Dict]:
+    """One deterministic serve run: seeded workload -> drive -> report.
+
+    The single entry point shared by this benchmark, the perf_smoke serve
+    gate, and tests/test_serve.py's cross-process replay check — same
+    (seed, args) means bit-identical trace and results everywhere.
+    Returns ``(serve_engine, report)``."""
+    if include_loops is None:
+        include_loops = backend == "sim"
+    engine = _fresh_engine(backend)
+    classes = serve_classes(engine, length, include_loops=include_loops)
+    cfg = config or ServeConfig()
+    rng = np.random.default_rng(seed)
+    if rate_per_us is None:
+        mean_us, _ = calibrate(backend, length, include_loops)
+        rate_per_us = 1.0 / mean_us
+    if bursty:
+        times = bursty_arrival_times(rng, n_requests, burst_size=16,
+                                     gap_us=8.0 / rate_per_us)
+    else:
+        times = poisson_arrival_times(rng, n_requests, rate_per_us)
+    reqs = make_requests(classes, times, length, rng)
+    serve = ServeEngine(engine, cfg)
+    report = serve.drive(reqs)
+    report["results_digest"] = serve.results_digest()
+    return serve, report
+
+
+def run(length: int = 64, n_requests: int = 200, backend: str = "sim",
+        seed: int = 0, loads: Tuple[float, ...] = LOAD_POINTS
+        ) -> List[dict]:
+    include_loops = backend == "sim"
+    mean_us, classes = calibrate(backend, length, include_loops)
+    rows: List[dict] = []
+    for load in loads:
+        rate = load / mean_us
+        _, rep = soak(seed, n_requests, length=length, backend=backend,
+                      rate_per_us=rate, include_loops=include_loops)
+        lat = rep["latency"]
+        rows.append({
+            "backend": backend,
+            "length": length,
+            "requests": n_requests,
+            "seed": seed,
+            "classes": len(classes),
+            "offered_load": load,
+            "offered_rps": rate * 1e6,
+            "duration_us": rep["now_us"],
+            "throughput_rps": rep["served"] / rep["now_us"] * 1e6,
+            "served": rep["served"],
+            "rejected": rep["rejected"],
+            "failed": rep["failed"],
+            "preemptions": rep["preemptions"],
+            "batches": rep["batches"],
+            "close_reasons": rep["close_reasons"],
+            "p50_us": lat["p50_us"] if lat["count"] else None,
+            "p99_us": lat["p99_us"] if lat["count"] else None,
+            "config_cycles_paid": rep["config_cycles_paid"],
+            "config_cycles_naive": rep["config_cycles_naive"],
+            "config_cycles_saved": rep["config_cycles_saved"],
+            "trace_digest": rep["trace_digest"],
+            "results_digest": rep["results_digest"],
+        })
+    # the acceptance claim: under the heaviest traffic, continuous
+    # batching pays strictly fewer config cycles than per-request dispatch
+    top = rows[-1]
+    assert top["config_cycles_paid"] < top["config_cycles_naive"], (
+        f"{backend}: continuous batching saved nothing at load "
+        f"{top['offered_load']}x: paid {top['config_cycles_paid']} vs "
+        f"naive {top['config_cycles_naive']}")
+    return rows
+
+
+def write_json(rows: List[dict], path: str = "BENCH_serve.json") -> str:
+    with open(path, "w") as f:
+        json.dump({"bench": "serve", "rows": rows}, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(length: int = 64, n_requests: int = 200,
+         pallas_requests: int = 48, json_path: str = "BENCH_serve.json",
+         seed: int = 0, backends: Tuple[str, ...] = ("sim", "pallas")
+         ) -> List[dict]:
+    rows: List[dict] = []
+    for backend in backends:
+        n = n_requests if backend == "sim" else pallas_requests
+        note = " [interpret mode; loop class excluded per capability " \
+               "matrix]" if backend == "pallas" else ""
+        print(f"  backend={backend}, {n} requests{note} (latencies are "
+              f"virtual-clock us — modeled cycles, machine-independent)")
+        brows = run(length=length, n_requests=n, backend=backend, seed=seed)
+        print(f"  {'load':>5s} {'offer rps':>10s} {'tput rps':>10s} "
+              f"{'p50 us':>8s} {'p99 us':>8s} {'srv':>4s} {'rej':>4s} "
+              f"{'pre':>4s} {'cfg paid':>9s} {'cfg naive':>9s}")
+        for r in brows:
+            print(f"  {r['offered_load']:5.2f} {r['offered_rps']:10.0f} "
+                  f"{r['throughput_rps']:10.0f} {r['p50_us']:8.1f} "
+                  f"{r['p99_us']:8.1f} {r['served']:4d} {r['rejected']:4d} "
+                  f"{r['preemptions']:4d} {r['config_cycles_paid']:9d} "
+                  f"{r['config_cycles_naive']:9d}")
+        rows.extend(brows)
+    if json_path:
+        print(f"  wrote {write_json(rows, json_path)}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--length", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=200,
+                    help="sim requests per load point")
+    ap.add_argument("--pallas-requests", type=int, default=48,
+                    help="pallas requests per load point (interpret mode "
+                         "is CPU-bound)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", action="append", default=None,
+                    choices=("sim", "pallas"))
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="output path ('' disables)")
+    args = ap.parse_args()
+    main(length=args.length, n_requests=args.requests,
+         pallas_requests=args.pallas_requests, json_path=args.json,
+         seed=args.seed, backends=tuple(args.backend or ("sim", "pallas")))

@@ -15,6 +15,11 @@ budget applies** — instead every pallas row must assert bit-exact value
 parity against the sim backend (``values_match_sim``) and identical cycle
 columns (timing/value decoupling).
 
+The serve gate (ISSUE 8) replays a fixed-seed 200-request soak through
+``repro.serve`` under the virtual clock: served/rejected/failed counts
+are pinned exactly (the run is deterministic) and the p99 latency — in
+machine-independent virtual microseconds — must meet the pinned budget.
+
     PYTHONPATH=src python -m benchmarks.perf_smoke
 """
 from __future__ import annotations
@@ -135,6 +140,41 @@ def main(factor: float = 2.0, baseline_path: str = BASELINE_PATH) -> int:
         failures.append(("pallas", "rows",
                          sorted(r["kernel"] for r in rows_p),
                          PALLAS_SMOKE_KERNELS))
+
+    # serve smoke (ISSUE 8): a fixed-seed soak through the serving loop
+    # under the virtual clock. Counts are pinned EXACTLY — the virtual
+    # clock makes the whole run deterministic, so a changed served/
+    # rejected/failed split means the scheduler's behavior drifted. The
+    # p99 budget is virtual-time (modeled cycles): machine-independent,
+    # hence no factor/scale applied.
+    sb = baseline.get("serve")
+    if sb is not None:
+        from benchmarks.bench_serve import calibrate as serve_calibrate
+        from benchmarks.bench_serve import soak
+        mean_us, _ = serve_calibrate("sim", baseline["length"], True)
+        _, rep = soak(seed=sb["seed"], n_requests=sb["requests"],
+                      length=baseline["length"], backend="sim",
+                      rate_per_us=sb["offered_load"] / mean_us)
+        p99 = rep["latency"]["p99_us"]
+        print(f"  serve gate: seed={sb['seed']} requests={sb['requests']} "
+              f"load={sb['offered_load']}x -> served={rep['served']} "
+              f"rejected={rep['rejected']} failed={rep['failed']} "
+              f"p99={p99:.1f} us (budget {sb['p99_budget_us']:.1f} "
+              f"virtual us)")
+        for field in ("served", "rejected", "failed"):
+            if rep[field] != sb[field]:
+                print(f"  serve {field} {rep[field]} != pinned "
+                      f"{sb[field]} ACCOUNTING DRIFTED")
+                failures.append(("serve", field, rep[field], sb[field]))
+        total = rep["served"] + rep["rejected"] + rep["failed"]
+        if rep["offered"] != sb["requests"] or total != rep["offered"]:
+            print(f"  serve accounting leak: offered={rep['offered']} "
+                  f"served+rejected+failed={total}")
+            failures.append(("serve", "accounting", total, rep["offered"]))
+        if p99 > sb["p99_budget_us"]:
+            print(f"  serve p99 {p99:.1f} us > budget "
+                  f"{sb['p99_budget_us']:.1f} us REGRESSED")
+            failures.append(("serve", "p99_us", p99, sb["p99_budget_us"]))
 
     # obs smoke: the entire bench ran through the instrumented pipeline
     # with observability disabled — not one span may have been recorded

@@ -1,109 +1,98 @@
-"""Serve mixed kernel traffic through the execution engine.
+"""Serve mixed kernel traffic through the always-on serving engine.
 
-Demonstrates the full unified pipeline (DESIGN.md §8) on a request mix an
-embedded deployment would actually see: three kernels, interleaved arrival
-order, dispatched twice —
+The ``repro.serve`` client walkthrough (DESIGN.md §14), in three acts:
 
-  1. naive:    every request configures the fabric from scratch;
-  2. batched:  requests are queued and flushed grouped by config class, so
-               same-kernel runs pay only the stream re-arm preamble.
-
-Prints per-strategy Tally breakdowns, the configuration cycles the
-batcher saved, and — via the ``repro.obs`` metrics registry — per-request
-latency percentiles (p50/p90/p99) and throughput for each strategy. Also
-shows a non-4x4 geometry handling the same artifact pipeline.
+  1. **Deterministic soak** — a seeded open-loop Poisson request stream
+     (five config classes: short streaming kernels, a reduction, a
+     multi-shot plan, an irregular loop) driven through
+     :class:`~repro.serve.ServeEngine` under the virtual clock.
+     Continuous config-class batching, shot-boundary preemption of the
+     long multi-shot plan, and the SLO report (p50/p99, throughput,
+     config-cycle savings vs naive per-request dispatch) all fall out of
+     one ``drive()`` call — and the run is replayable: same seed, same
+     trace digest, same results, on any machine.
+  2. **Overload** — the same mix offered 3x faster than the fabric can
+     serve: the bounded queue pushes back with named ``AdmissionError``
+     rejections instead of letting latency grow without bound.
+  3. **Always-on** — the threaded :class:`~repro.serve.Server` front
+     end under a wall clock: clients ``submit()`` from anywhere, block
+     on ``Ticket.result()``, and the context manager drains cleanly.
 
 Run: PYTHONPATH=src python examples/engine_serve.py
 """
-import time
-
 import numpy as np
 
-from repro import obs
-from repro.core import kernels_lib as K
-from repro.core.fabric import Fabric
 from repro.engine import ArtifactCache, Engine
+from repro.serve import (AdmissionError, ServeConfig, Server, ServeEngine,
+                         make_requests, poisson_arrival_times,
+                         request_inputs, serve_classes)
 
 LENGTH = 64
-PER_KERNEL = 8
+N_REQUESTS = 120
+SEED = 42
 
 
-def make_traffic(rng):
-    """Interleaved request mix: (kernel name, DFG factory, inputs)."""
-    kernels = {
-        "relu": K.relu(),
-        "axpby": K.axpby(3, 5),
-        "mac1": K.mac1(LENGTH),
-    }
-    traffic = []
-    for i in range(PER_KERNEL):
-        for name, g in kernels.items():
-            ins = {k: rng.integers(-64, 64, LENGTH).astype(np.int32)
-                   for k in g.inputs}
-            traffic.append((name, g, ins))
-    return kernels, traffic
+def fresh_engine():
+    return Engine(cache=ArtifactCache(memory_only=True))
 
 
-def _latency_line(label: str, wall_s: float, n_requests: int) -> None:
-    """p50/p90/p99 + throughput from the obs metrics registry: the engine
-    itself recorded every request's latency into the
-    ``engine.request_latency_us`` histogram while dispatching."""
-    hist = obs.registry().histogram("engine.request_latency_us")
-    p = hist.percentiles((50, 90, 99))
-    print(f"{label}: latency p50={p[50]:7.1f} us  p90={p[90]:7.1f} us  "
-          f"p99={p[99]:7.1f} us  throughput={n_requests / wall_s:8.0f} req/s"
-          f"  ({hist.count} samples)")
+def soak(rate_per_us, cfg):
+    engine = fresh_engine()
+    classes = serve_classes(engine, LENGTH)
+    rng = np.random.default_rng(SEED)
+    times = poisson_arrival_times(rng, N_REQUESTS, rate_per_us)
+    reqs = make_requests(classes, times, LENGTH, rng)
+    serve = ServeEngine(engine, cfg)
+    return serve, serve.drive(reqs)
+
+
+def report_lines(label, rep):
+    lat = rep["latency"]
+    print(f"{label}: served {rep['served']}/{rep['offered']} "
+          f"(rejected {rep['rejected']}) in {rep['now_us']:.0f} virtual us"
+          f" -> {rep['served'] / rep['now_us'] * 1e6:.0f} req/s")
+    print(f"  latency p50={lat['p50_us']:7.1f} us  "
+          f"p99={lat['p99_us']:7.1f} us   preemptions={rep['preemptions']}"
+          f"  batches={rep['batches']} {rep['close_reasons']}")
+    print(f"  config cycles: paid {rep['config_cycles_paid']} vs naive "
+          f"{rep['config_cycles_naive']} "
+          f"(saved {rep['config_cycles_saved']})")
 
 
 def main():
-    rng = np.random.default_rng(42)
-    kernels, traffic = make_traffic(rng)
+    cfg = ServeConfig(max_batch=8, max_wait_us=300.0, queue_capacity=48,
+                      preempt_wait_us=100.0)
 
-    print(f"traffic: {len(traffic)} requests, {len(kernels)} config classes,"
-          f" arrival order interleaved (worst case for a naive dispatcher)")
+    # --- 1. nominal load: continuous batching + preemption, replayable
+    serve, rep = soak(rate_per_us=0.12, cfg=cfg)
+    print(f"traffic: {N_REQUESTS} seeded Poisson arrivals over 5 config "
+          f"classes (incl. one multi-shot plan, one irregular loop)")
+    report_lines("nominal ", rep)
+    print(f"  replay contract: trace {rep['trace_digest'][:16]}… / "
+          f"results {serve.results_digest()[:16]}… (seed {SEED})")
+    assert rep["config_cycles_paid"] < rep["config_cycles_naive"]
 
-    obs.enable(fresh=True)             # per-request latency metrics on
-    naive = Engine(cache=ArtifactCache(memory_only=True))
-    arts = {name: naive.compile(g) for name, g in kernels.items()}
-    t0 = time.perf_counter()
-    for name, _, ins in traffic:
-        naive.run(arts[name], ins)
-    wall_naive = time.perf_counter() - t0
-    t = naive.tally
-    print(f"\nnaive   : config={t.config:6d} rearm={t.rearm:6d} "
-          f"exec={t.exec:6d} total={t.total:6d} (duty {t.duty:.2f})")
-    _latency_line("naive   ", wall_naive, len(traffic))
+    # --- 2. overload: admission control takes the hit, not the tail
+    _, hot = soak(rate_per_us=0.6, cfg=cfg)
+    print()
+    report_lines("overload", hot)
+    assert hot["rejected"] > 0, "expected backpressure at 5x the load"
 
-    obs.enable(fresh=True)             # fresh registry: batched phase only
-    batched = Engine(cache=ArtifactCache(memory_only=True))
-    arts = {name: batched.compile(g) for name, g in kernels.items()}
-    t0 = time.perf_counter()
-    handles = [(name, batched.submit(arts[name], ins))
-               for name, _, ins in traffic]
-    batched.flush()
-    wall_batched = time.perf_counter() - t0
-    t = batched.tally
-    print(f"\nbatched : config={t.config:6d} rearm={t.rearm:6d} "
-          f"exec={t.exec:6d} total={t.total:6d} (duty {t.duty:.2f})")
-    _latency_line("batched ", wall_batched, len(traffic))
-    print(f"batching saved {batched.stats.config_cycles_saved} configuration"
-          f" cycles ({batched.stats.requests} requests,"
-          f" {batched.stats.flushes} flush)")
-    obs.disable()
-
-    # results stay exact — spot-check one relu request
-    name, h = next((n, h) for n, h in handles if n == "relu")
-    x = h.inputs["x"]
-    assert (h.result()["out"] == np.maximum(x, 0)).all()
-
-    # same pipeline, different geometry
-    eng64 = Engine(fabric=Fabric(rows=6, cols=4))
-    art = eng64.compile(K.mac1(LENGTH))
-    ins = {"a": np.arange(LENGTH, dtype=np.int32),
-           "b0": np.ones(LENGTH, dtype=np.int32)}
-    out = eng64.run(art, ins)
-    print(f"\n6x4 fabric: mac1 -> {int(out['out0'][0])} "
-          f"(= {LENGTH*(LENGTH-1)//2}), {eng64.tally.total} cycles")
+    # --- 3. always-on threaded front end (wall clock)
+    engine = fresh_engine()
+    classes = serve_classes(engine, LENGTH)
+    rng = np.random.default_rng(SEED)
+    with Server(engine, cfg) as srv:
+        tickets = [srv.submit(art, request_inputs(art, LENGTH, rng))
+                   for art in classes.values() for _ in range(4)]
+        outs = [tk.result(timeout=60) for tk in tickets]
+    relu = classes["relu"]
+    tk = next(t for t in tickets if t.artifact is relu)
+    assert (tk.outputs["out"] == np.maximum(tk.inputs["x"], 0)).all()
+    print(f"\nthreaded: {len(outs)} requests served via Server.submit(), "
+          f"results exact, drained clean on exit")
+    print(f"rejections raise {AdmissionError.__name__} — named, never "
+          f"silent")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,7 @@ Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 import sys
 
-from repro.launch import serve as S
+from repro.launch import serve_lm as S
 
 
 def main() -> None:

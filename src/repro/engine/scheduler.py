@@ -159,6 +159,7 @@ class Engine:
         self.mapper = mapper
         self.stats = EngineStats()
         self._queue: List[Handle] = []
+        self._flushing = False
 
     # -- compile -----------------------------------------------------------
     def compile(self, fn_or_dfg, length: Optional[int] = None,
@@ -171,16 +172,18 @@ class Engine:
         return compiler.compile(fn_or_dfg, length, **kw)
 
     # -- dispatch ----------------------------------------------------------
-    def submit(self, artifact: CompiledArtifact,
-               inputs: Dict[str, np.ndarray], *,
-               streams_changed: Optional[int] = None,
-               layout: Tuple[int, ...] = (),
-               pe_config_words: int = 0) -> Handle:
-        """Queue one request; execution happens at the next ``flush()``.
+    def prepare(self, artifact: CompiledArtifact,
+                inputs: Dict[str, np.ndarray], *,
+                streams_changed: Optional[int] = None,
+                layout: Tuple[int, ...] = (),
+                pe_config_words: int = 0) -> Handle:
+        """Validate a request and build its :class:`Handle` WITHOUT
+        queueing it — the entry point for callers that drive execution
+        themselves (:meth:`iter_shots`, the ``repro.serve`` loop).
 
-        All capability validation happens HERE, where the stream length is
+        All capability validation happens here, where the stream length is
         first known — a request that cannot run on this backend must fail
-        at submit (queue untouched), never mid-flush."""
+        before it is accepted anywhere, never mid-dispatch."""
         self._check(artifact)
         missing = [n for n in artifact.dfg.inputs if n not in inputs]
         if missing:
@@ -204,22 +207,64 @@ class Engine:
         if streams_changed is None:
             g = artifact.dfg
             streams_changed = len(g.inputs) + len(g.outputs)
-        h = Handle(artifact, inputs, streams_changed, layout, pe_config_words)
+        return Handle(artifact, inputs, streams_changed, layout,
+                      pe_config_words)
+
+    def submit(self, artifact: CompiledArtifact,
+               inputs: Dict[str, np.ndarray], *,
+               streams_changed: Optional[int] = None,
+               layout: Tuple[int, ...] = (),
+               pe_config_words: int = 0) -> Handle:
+        """Queue one request; execution happens at the next ``flush()``.
+
+        Re-entrancy contract (pinned by tests/test_engine.py): a
+        ``submit()`` issued while a ``flush()`` is in progress — e.g. from
+        a value-substrate callback — queues safely for the NEXT flush; it
+        is never folded into the flush already running."""
+        h = self.prepare(artifact, inputs, streams_changed=streams_changed,
+                         layout=layout, pe_config_words=pe_config_words)
         self._queue.append(h)
         obs.set_gauge("engine.queue_depth", len(self._queue))
         return h
 
-    def flush(self) -> List[Handle]:
+    def cancel(self, h: Handle) -> bool:
+        """Remove a queued, not-yet-executed request. Returns whether the
+        handle was actually queued (an executed or unknown handle is a
+        no-op — results are never revoked)."""
+        for i, q in enumerate(self._queue):
+            if q is h:
+                del self._queue[i]
+                obs.set_gauge("engine.queue_depth", len(self._queue))
+                return True
+        return False
+
+    def flush(self, on_batch=None) -> List[Handle]:
         """Execute all queued requests, batched by config class.
 
         On the pallas backend, consecutive same-artifact single-shot
         requests with equal stream lengths additionally dispatch as one
         lane-batched padded Pallas grid; cycle accounting still runs
         per-request through the runner (each lane occupies the model
-        fabric for its own shot)."""
+        fabric for its own shot).
+
+        ``on_batch``: optional batch-close hook — called once per
+        config-class group, after every request of the group executed,
+        as ``on_batch(config_class, handles)``. The ``repro.serve`` layer
+        and tests use it to observe exactly how the scheduler grouped a
+        flush without re-deriving the grouping.
+
+        ``flush()`` is not re-entrant: a nested call (from a hook or a
+        value substrate) raises ``ArtifactError`` naming the violation
+        instead of double-dispatching the queue."""
+        if self._flushing:
+            raise ArtifactError(
+                "re-entrant flush(): flush() called while a flush is "
+                "already dispatching; submit() during a flush queues for "
+                "the next one instead")
         if not self._queue:
             return []
         queue, self._queue = self._queue, []
+        self._flushing = True
         obs.set_gauge("engine.queue_depth", 0)
         # stable group-by: classes keep first-arrival order, requests keep
         # arrival order within their class
@@ -234,11 +279,17 @@ class Engine:
             for n in class_size.values():
                 obs.observe("engine.batch_size", n)
         current: List[Handle] = []       # the unit a raise would poison
+        group: List[Handle] = []         # running config-class group (hook)
         with obs.span("schedule.flush", requests=len(queue),
                       classes=len(class_rank), backend=self.backend):
             try:
                 i = 0
                 while i < len(queue):
+                    if on_batch is not None and group and \
+                            group[0].artifact.config_class != \
+                            queue[i].artifact.config_class:
+                        on_batch(group[0].artifact.config_class, group)
+                        group = []
                     batch = [queue[i]]
                     if self.backend == "pallas" and \
                             queue[i].artifact.n_shots == 1:
@@ -275,7 +326,10 @@ class Engine:
                         for h in batch:
                             current = [h]
                             self._execute(h)
+                    group.extend(batch)
                     i += len(batch)
+                if on_batch is not None and group:
+                    on_batch(group[0].artifact.config_class, group)
             except Exception:
                 # never strand accepted requests — but never retry the unit
                 # that raised either (re-queuing the poisoned request would
@@ -286,6 +340,8 @@ class Engine:
                     + self._queue
                 obs.set_gauge("engine.queue_depth", len(self._queue))
                 raise
+            finally:
+                self._flushing = False
         self.stats.flushes += 1
         obs.inc("engine.flushes")
         if obs.enabled():
@@ -306,6 +362,84 @@ class Engine:
         self.runner.invalidate_config()
         self._execute(h)
         return h.result()
+
+    def iter_shots(self, h: Handle):
+        """Execute a prepared request one shot at a time — the engine's
+        **preemption points**.
+
+        Yields ``(shot_index, n_shots)`` after each shot completes; between
+        two ``next()`` calls the caller may dispatch arbitrary other work
+        through this engine (the resumed shot then pays a reconfiguration,
+        exactly as real preemption would). After exhaustion ``h.result()``
+        holds the bit-exact outputs — intermediate shot streams live in the
+        suspended generator, so interleaving never corrupts them. Cycle and
+        stats accounting matches :meth:`flush` dispatching the same handle.
+        """
+        art = h.artifact
+        paid = 0            # config cycles charged to THIS request's shots
+        t0 = time.perf_counter() if obs.enabled() else 0.0
+        self.stats.config_cycles_naive += art.config_cycles()
+        for shot in art.plan.shots:
+            self.runner.seed_mapping(shot.key, shot.mapping)
+        for (key, length, layout, n_banks), tr in art.timing_traces.items():
+            self.runner.seed_trace(key, length, layout, tr)
+        plan = art.plan
+        env = {(name, "out"): np.asarray(h.inputs[name], dtype=np.int32)
+               for name in plan.dfg.inputs}
+        results: Dict[str, np.ndarray] = {}
+        n = plan.n_shots
+        for i, shot in enumerate(plan.shots):
+            prev_value_fn = self.runner.value_fn
+            self.runner.value_fn = self._value_fn
+            shot_before = self.runner.tally.config
+            try:
+                with obs.span(f"dispatch.{self.backend}", kernel=art.name,
+                              config_class=art.config_class, shot=i,
+                              shots=n):
+                    if n == 1:
+                        ins = {iname: np.asarray(h.inputs[iname],
+                                                 dtype=np.int32)
+                               for iname, _ in shot.inputs}
+                        outs = self.runner.run_shot(
+                            shot.key, shot.dfg, ins,
+                            streams_changed=h.streams_changed,
+                            pe_config_words=h.pe_config_words,
+                            layout=h.layout, config_class=art.config_class)
+                    else:
+                        ins = {iname: env[sig] for iname, sig in shot.inputs}
+                        outs = self.runner.run_shot(
+                            shot.key, shot.dfg, ins,
+                            streams_changed=len(shot.inputs) +
+                            len(shot.outputs),
+                            config_class=shot.key)
+            finally:
+                self.runner.value_fn = prev_value_fn
+            # charge only this shot's config fetches — interleaved foreign
+            # work between two yields must never bill this request
+            paid += self.runner.tally.config - shot_before
+            for oname, sig in shot.outputs:
+                env[sig] = outs[oname]
+            for orig, oname in shot.finals.items():
+                results[orig] = outs[oname]
+            if n == 1:
+                h._outputs = outs
+            yield i, n
+        if n > 1:
+            missing = [o for o in plan.dfg.outputs if o not in results]
+            if missing:
+                raise ArtifactError(
+                    f"{art.name}: plan never produced {missing}")
+            h._outputs = {o: results[o] for o in plan.dfg.outputs}
+        h._done = True
+        self.stats.requests += 1
+        self.stats.config_cycles_paid += paid
+        if t0:
+            obs.observe("engine.request_latency_us",
+                        (time.perf_counter() - t0) * 1e6)
+            obs.inc("engine.requests")
+            obs.inc("engine.config_cycles_paid", paid)
+            obs.inc("engine.config_cycles_naive", art.config_cycles())
+        self._harvest_traces(art)
 
     # -- internals ---------------------------------------------------------
     def _check(self, artifact: CompiledArtifact) -> None:

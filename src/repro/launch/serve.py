@@ -1,94 +1,11 @@
-"""Batched serving driver: prefill + greedy decode with KV caches.
+"""Deprecated alias for :mod:`repro.launch.serve_lm`.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+The LM prefill/decode launch driver moved to ``repro.launch.serve_lm``
+so its name stops colliding with :mod:`repro.serve`, the always-on CGRA
+kernel serving engine (ISSUE 8). Import from the new location.
 """
-from __future__ import annotations
-
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import get_arch
-from repro.data.pipeline import stub_frames
-from repro.models import encdec, hybrid, ssm, transformer
-from repro.models.api import build_model
-
-
-def init_decode_state(cfg, api, batch, max_len, prompt_batch):
-    if cfg.family in ("dense", "moe", "vlm"):
-        return transformer.init_caches(cfg, batch, max_len)
-    if cfg.family == "ssm":
-        return ssm.init_lm_states(cfg, batch)
-    if cfg.family == "hybrid":
-        return hybrid.init_decode_state(cfg, batch, max_len)
-    enc_out = encdec.encode  # audio handled in main
-    raise ValueError(cfg.family)
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    api = build_model(cfg)
-    params = api.init_params(jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    B, S = args.batch, args.prompt_len
-    max_len = S + args.gen + 1
-    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
-
-    decode = jax.jit(api.decode_step, donate_argnums=(1,))
-
-    t0 = time.time()
-    if cfg.family == "audio":
-        frames = jnp.asarray(stub_frames(B, cfg.encdec.enc_len, cfg.d_model)
-                             ).astype(cfg.jdtype)
-        enc_out = encdec.encode(params, cfg, frames)
-        state = (enc_out, encdec.init_caches(cfg, B, max_len))
-    elif cfg.family in ("dense", "moe", "vlm"):
-        state = transformer.init_caches(cfg, B, max_len)
-    elif cfg.family == "ssm":
-        state = ssm.init_lm_states(cfg, B)
-    else:
-        state = hybrid.init_decode_state(cfg, B, max_len)
-
-    # prefill via repeated decode over the prompt (cache warmup); production
-    # uses api.prefill — this path also exercises long-cache decode_step
-    cache_len = jnp.zeros((), jnp.int32)
-    logits = None
-    for t in range(S):
-        logits, state = decode(params, state, tokens[:, t:t + 1], cache_len)
-        cache_len = cache_len + 1
-    prefill_t = time.time() - t0
-
-    out = []
-    t0 = time.time()
-    cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    for t in range(args.gen):
-        out.append(np.asarray(cur)[:, 0])
-        logits, state = decode(params, state, cur, cache_len)
-        cache_len = cache_len + 1
-        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    gen_t = time.time() - t0
-    gen = np.stack(out, 1)
-    print(f"[serve] arch={cfg.arch_id} batch={B} prompt={S} gen={args.gen}")
-    print(f"[serve] prefill {prefill_t:.2f}s, decode "
-          f"{gen_t / args.gen * 1000:.1f} ms/token/batch")
-    print(f"[serve] sample generations (token ids): {gen[0][:12].tolist()}")
-    assert np.all(gen >= 0) and np.all(gen < cfg.vocab), "padded-vocab leak!"
-
+from repro.launch.serve_lm import *            # noqa: F401,F403
+from repro.launch.serve_lm import init_decode_state, main  # noqa: F401
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,35 @@
+"""repro.serve — always-on serving on top of the batching Engine.
+
+Turns the synchronous ``Engine.submit/flush`` library call into a
+service: asynchronously arriving request streams, continuous config-class
+batching (size / deadline / class-switch close), shot-boundary preemption
+of long multi-shot plans, bounded-queue admission control with named
+``AdmissionError`` rejections, and SLO tracking — all replayable
+bit-exactly under a :class:`VirtualClock` (DESIGN.md §14).
+
+Two front ends over one deterministic state machine:
+
+  * :class:`ServeEngine.drive` — discrete-event loop under a virtual
+    clock (tests, benchmarks, trace replay);
+  * :class:`Server` — worker thread + thread-safe ingress queue under a
+    wall clock (real always-on operation).
+
+Not to be confused with ``repro.launch.serve_lm`` (the LM
+prefill/decode launch driver) — this package serves CGRA kernel
+requests.
+"""
+from repro.serve.clock import VirtualClock, WallClock
+from repro.serve.health import LivenessProbe
+from repro.serve.load import (bursty_arrival_times, make_requests,
+                              poisson_arrival_times, request_inputs,
+                              serve_classes)
+from repro.serve.loop import (AdmissionError, ServeConfig, ServeEngine,
+                              Server, Ticket)
+from repro.serve.slo import SLOTracker
+
+__all__ = [
+    "AdmissionError", "LivenessProbe", "Server", "ServeConfig",
+    "ServeEngine", "SLOTracker", "Ticket", "VirtualClock", "WallClock",
+    "bursty_arrival_times", "make_requests", "poisson_arrival_times",
+    "request_inputs", "serve_classes",
+]

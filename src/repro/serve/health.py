@@ -1,0 +1,50 @@
+"""Liveness probing for the serving loop.
+
+Reuses the seed runtime's fault-tolerance primitives
+(``repro.runtime.fault_tolerance``): the service loop publishes a
+file-based :class:`Heartbeat` after every completed dispatch unit (batch
+or shot), and a :class:`HealthMonitor` flags the worker as stalled when
+the heartbeat goes quiet for longer than ``timeout_s``. On a stall the
+serving engine drains the stalled class's queue with **named rejections**
+(``AdmissionError`` spelling out the stall) instead of letting callers
+block forever — DESIGN.md §14's liveness rule.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class LivenessProbe:
+    """Heartbeat publisher + stall detector over one serve worker.
+
+    ``beat()`` is called by the service loop at every dispatch boundary;
+    ``stalled(now)`` answers from the on-disk heartbeats (pass an explicit
+    ``now`` for deterministic tests). Imports of the fault-tolerance
+    runtime are lazy — it pulls in jax, which the serve hot path must not.
+    """
+
+    def __init__(self, directory: str, timeout_s: float = 5.0,
+                 host_id: int = 0):
+        from repro.runtime.fault_tolerance import Heartbeat, HealthMonitor
+        self.directory = directory
+        self.timeout_s = timeout_s
+        self._hb = Heartbeat(directory, host_id)
+        # step_lag never fires with one worker; the wall timeout is the
+        # single-host liveness signal
+        self._monitor = HealthMonitor(directory, timeout_s=timeout_s)
+        self._step = 0
+
+    def beat(self) -> int:
+        """Publish one liveness step (monotonic)."""
+        self._step += 1
+        self._hb.beat(self._step)
+        return self._step
+
+    @property
+    def step(self) -> int:
+        return self._step
+
+    def stalled(self, now: Optional[float] = None) -> List[int]:
+        """Host ids whose heartbeat lags; non-empty means the worker (or a
+        peer) is stalled. ``now`` is Unix time (``time.time`` domain)."""
+        return self._monitor.stalled(now)

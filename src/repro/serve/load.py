@@ -1,0 +1,113 @@
+"""Seeded load generation: arrival processes + mixed-kernel workloads.
+
+Everything here is a pure function of a ``numpy.random.default_rng`` seed,
+so a generated workload — arrival times, class choices, stream contents —
+is bit-identical across processes. That is half of the replay contract
+(the other half is the virtual clock in ``serve/clock.py``).
+
+Arrival processes:
+  * :func:`poisson_arrival_times` — open-loop Poisson (exponential gaps at
+    a fixed offered rate), the classic independent-users model;
+  * :func:`bursty_arrival_times` — clustered arrivals (bursts of near-
+    simultaneous requests separated by exponential quiet gaps), the
+    adversarial case for admission control and batch-close deadlines.
+
+Workload construction: :func:`serve_classes` compiles the standard mixed
+request classes (short streaming kernels, a reduction, a multi-shot plan,
+an irregular loop) on a caller's engine; :func:`make_requests` assigns a
+seeded class choice + input streams to each arrival time.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import kernels_lib as K
+
+
+def poisson_arrival_times(rng: np.random.Generator, n: int,
+                          rate_per_us: float, t0: float = 0.0
+                          ) -> np.ndarray:
+    """``n`` open-loop Poisson arrival times (us) at ``rate_per_us``."""
+    if rate_per_us <= 0:
+        raise ValueError(f"rate_per_us must be positive, got {rate_per_us}")
+    gaps = rng.exponential(1.0 / rate_per_us, n)
+    return t0 + np.cumsum(gaps)
+
+
+def bursty_arrival_times(rng: np.random.Generator, n: int, burst_size: int,
+                         gap_us: float, intra_us: float = 0.5,
+                         t0: float = 0.0) -> np.ndarray:
+    """``n`` arrivals in bursts of ``burst_size``: requests inside a burst
+    land ``intra_us`` apart, bursts are separated by exponential quiet
+    periods with mean ``gap_us``."""
+    if burst_size < 1:
+        raise ValueError(f"burst_size must be >= 1, got {burst_size}")
+    times: List[float] = []
+    t = float(t0)
+    while len(times) < n:
+        t += float(rng.exponential(gap_us))
+        for i in range(min(burst_size, n - len(times))):
+            times.append(t + i * intra_us)
+        t = times[-1]
+    return np.asarray(times[:n])
+
+
+def serve_classes(engine, length: int, include_loops: bool = True,
+                  include_multishot: bool = True) -> Dict[str, object]:
+    """Compile the standard serve workload mix on ``engine``; returns
+    ``{label: CompiledArtifact}``.
+
+    The mix covers the scheduling shapes the paper's traffic story needs:
+    short streaming kernels (relu/vadd/fft — the latency-sensitive class),
+    a reduction (mac1), a multi-shot plan (axpby under ``pe_limit=1`` —
+    the preemptible long request), and an irregular loop (div_loop,
+    data-dependent trip count). ``include_loops=False`` keeps the mix
+    inside the pallas capability set (loop state is sim-only)."""
+    classes = {
+        "relu": engine.compile(K.relu()),
+        "vadd": engine.compile(K.vadd()),
+        "fft": engine.compile(K.fft_butterfly()),
+        "mac1": engine.compile(K.mac1(length)),
+    }
+    if include_multishot:
+        classes["axpby_ms"] = engine.compile(K.axpby(3, 5), pe_limit=1)
+    if include_loops:
+        classes["div_loop"] = engine.compile(K.div_loop(7))
+    return classes
+
+
+def request_inputs(artifact, length: int,
+                   rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    """Seeded input streams for one request (recirculating kernels get the
+    positive operand range the loop semantics require — same convention as
+    benchmarks/bench_engine.py)."""
+    g = artifact.dfg
+    lo, hi = (1, 100) if g.has_recirculation() else (-64, 64)
+    return {name: rng.integers(lo, hi, length).astype(np.int32)
+            for name in g.inputs}
+
+
+def make_requests(classes: Dict[str, object], times: Sequence[float],
+                  length: int, rng: np.random.Generator,
+                  weights: Optional[Dict[str, float]] = None
+                  ) -> List[Tuple[float, object, Dict[str, np.ndarray]]]:
+    """Assign each arrival time a seeded class choice + input streams.
+
+    Returns ``[(t_us, artifact, inputs), ...]`` sorted by time — exactly
+    the shape :meth:`repro.serve.ServeEngine.drive` ingests. ``weights``
+    biases the class mix (default uniform)."""
+    labels = sorted(classes)
+    if weights is None:
+        p = np.full(len(labels), 1.0 / len(labels))
+    else:
+        w = np.asarray([float(weights.get(l, 1.0)) for l in labels])
+        p = w / w.sum()
+    picks = rng.choice(len(labels), size=len(times), p=p)
+    reqs = []
+    for t, k in zip(times, picks):
+        art = classes[labels[int(k)]]
+        reqs.append((float(t), art, request_inputs(art, length, rng)))
+    reqs.sort(key=lambda r: r[0])
+    return reqs

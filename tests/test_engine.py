@@ -248,3 +248,153 @@ def test_pallas_backend_reports_model_cycles():
     np.testing.assert_array_equal(scale3(x), 3 * x)
     assert scale3.last.backend == "pallas"
     assert scale3.last.cycles > 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler re-entrancy, cancellation, batch hooks, iter_shots (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_submit_during_flush_queues_for_next_flush():
+    """Regression pin (ISSUE 8 satellite): a submit() issued while a
+    flush() is dispatching — here from the value-substrate callback —
+    queues safely for the NEXT flush; it is never folded into (nor does
+    it corrupt) the flush already running."""
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    art = eng.compile(K.relu())
+    xs = _streams(3)
+    late = {"handle": None}
+    real_value_fn = eng._value_fn
+
+    def reentrant_value_fn(g, inputs):
+        if late["handle"] is None:
+            late["handle"] = eng.submit(art, {"x": xs[2]})
+        return real_value_fn(g, inputs)
+
+    eng._value_fn = reentrant_value_fn
+    handles = [eng.submit(art, {"x": xs[0]}), eng.submit(art, {"x": xs[1]})]
+    flushed = eng.flush()
+    # only the two pre-flush requests executed; the mid-flush submit is
+    # queued, untouched, for the next flush
+    assert flushed == handles
+    assert all(h._done for h in handles)
+    assert late["handle"] is not None and not late["handle"]._done
+    assert eng._queue == [late["handle"]]
+    eng._value_fn = real_value_fn
+    assert eng.flush() == [late["handle"]]
+    np.testing.assert_array_equal(late["handle"].result()["out"],
+                                  np.maximum(xs[2], 0))
+
+
+def test_nested_flush_raises_named_error_outer_flush_survives():
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    art = eng.compile(K.relu())
+    xs = _streams(2)
+    seen = {}
+    real_value_fn = eng._value_fn
+
+    def nested_flush_value_fn(g, inputs):
+        if "err" not in seen:
+            eng.submit(art, {"x": xs[1]})
+            with pytest.raises(ArtifactError,
+                               match="re-entrant flush"):
+                eng.flush()
+            seen["err"] = True
+        return real_value_fn(g, inputs)
+
+    eng._value_fn = nested_flush_value_fn
+    h = eng.submit(art, {"x": xs[0]})
+    eng.flush()
+    assert seen.get("err") and h._done
+    np.testing.assert_array_equal(h.result()["out"], np.maximum(xs[0], 0))
+    # the nested submit survived the refused nested flush
+    assert len(eng._queue) == 1
+    eng._value_fn = real_value_fn
+    eng.flush()
+
+
+def test_cancel_removes_queued_request_only():
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    art = eng.compile(K.relu())
+    xs = _streams(2)
+    keep, drop = eng.submit(art, {"x": xs[0]}), eng.submit(art, {"x": xs[1]})
+    assert eng.cancel(drop) is True
+    assert eng.cancel(drop) is False          # already gone
+    flushed = eng.flush()
+    assert flushed == [keep] and keep._done and not drop._done
+    assert eng.cancel(keep) is False          # executed: never revoked
+
+
+def test_flush_on_batch_hook_sees_config_class_groups():
+    """on_batch fires once per config-class group with the handles in
+    dispatch order — the seam repro.serve observes batching through."""
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    relu, vadd = eng.compile(K.relu()), eng.compile(K.vadd())
+    xs = _streams(4)
+    hs = [eng.submit(relu, {"x": xs[0]}),
+          eng.submit(vadd, {"x": xs[1], "y": xs[2]}),
+          eng.submit(relu, {"x": xs[3]})]
+    groups = []
+    eng.flush(on_batch=lambda cls, batch: groups.append((cls, list(batch))))
+    assert [cls for cls, _ in groups] == [relu.config_class,
+                                          vadd.config_class]
+    assert groups[0][1] == [hs[0], hs[2]]     # class FIFO inside the group
+    assert groups[1][1] == [hs[1]]
+    assert all(h._done for h in hs)
+
+
+def _multishot_artifact(eng):
+    art = eng.compile(K.axpby(3, 5), pe_limit=1)
+    assert art.n_shots > 1
+    return art
+
+
+def test_iter_shots_matches_run_bit_exact_and_tally_parity():
+    """iter_shots (the serve loop's preemption seam) is run() sliced at
+    shot boundaries: same outputs, same tally, same paid/naive stats —
+    for both single-shot and multi-shot artifacts."""
+    for factory in (lambda e: e.compile(K.relu()), _multishot_artifact):
+        a, b = (Engine(cache=ArtifactCache(memory_only=True))
+                for _ in range(2))
+        art_a, art_b = factory(a), factory(b)
+        ins = {k: v for k, v in zip(art_a.dfg.inputs, _streams(4))}
+        want = a.run(art_a, dict(ins))
+        h = b.prepare(art_b, dict(ins))
+        steps = list(b.iter_shots(h))
+        assert steps == [(i, art_b.n_shots) for i in range(art_b.n_shots)]
+        assert h._done
+        for k in want:
+            np.testing.assert_array_equal(h.result()[k], want[k])
+        assert b.tally.total == a.tally.total
+        assert b.stats.config_cycles_paid == a.stats.config_cycles_paid
+        assert b.stats.config_cycles_naive == a.stats.config_cycles_naive
+        assert b.stats.requests == a.stats.requests == 1
+
+
+def test_iter_shots_interleaved_foreign_work_stays_exact():
+    """Foreign dispatches between two yields must neither corrupt the
+    paused plan's results nor get billed to its config attribution: the
+    engine-wide invariant paid == tally.config holds exactly even when a
+    plan's shots interleave with other classes' traffic."""
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    plan = _multishot_artifact(eng)
+    relu = eng.compile(K.relu())
+    ins = {k: v for k, v in zip(plan.dfg.inputs, _streams(4))}
+    xs = _streams(plan.n_shots)
+
+    oracle = Engine(cache=ArtifactCache(memory_only=True))
+    want = oracle.run(_multishot_artifact(oracle), dict(ins))
+
+    h = eng.prepare(plan, dict(ins))
+    gen = eng.iter_shots(h)
+    for i, x in zip(range(plan.n_shots), xs):
+        next(gen)
+        # foreign work lands on the fabric between this plan's shots
+        np.testing.assert_array_equal(eng.run(relu, {"x": x})["out"],
+                                      np.maximum(x, 0))
+    with pytest.raises(StopIteration):
+        next(gen)
+    for k in want:
+        np.testing.assert_array_equal(h.result()[k], want[k])
+    # complete, exact attribution: every config cycle the fabric paid is
+    # accounted to exactly one request
+    assert eng.stats.config_cycles_paid == eng.tally.config

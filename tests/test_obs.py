@@ -387,3 +387,53 @@ def test_report_cli_writes_all_exports(tmp_path, capsys):
     assert "strela_engine_requests 4" in prom
     lines = (tmp_path / "m.jsonl").read_text().splitlines()
     assert all(json.loads(line)["name"] for line in lines)
+
+
+# ---------------------------------------------------------------------------
+# serve.* metrics (ISSUE 8): zero-overhead off, complete counts on
+# ---------------------------------------------------------------------------
+
+def _serve_drive(cfg=None):
+    from repro.engine import ArtifactCache, Engine
+    from repro.serve import (ServeConfig, ServeEngine, make_requests,
+                             poisson_arrival_times, serve_classes)
+
+    eng = Engine(cache=ArtifactCache(memory_only=True))
+    classes = serve_classes(eng, 32)
+    r = np.random.default_rng(4)
+    times = poisson_arrival_times(r, 60, rate_per_us=0.3)
+    reqs = make_requests(classes, times, 32, r)
+    serve = ServeEngine(eng, cfg or ServeConfig(queue_capacity=8,
+                                                preempt_wait_us=30.0))
+    return serve, serve.drive(reqs)
+
+
+def test_serve_metrics_zero_overhead_when_disabled():
+    """A full serve soak — batching, rejections, preemptions — with obs
+    at the disabled default records not one span and materializes no
+    registry (the serve.* instrumentation is behind the same single
+    None-check as the engine's)."""
+    assert not obs.enabled()
+    _, rep = _serve_drive()
+    assert rep["rejected"] > 0            # the rejection path also ran
+    assert obs.ring_len() == 0
+    assert obs.registry() is None and obs.tracer() is None
+
+
+def test_serve_metrics_complete_when_enabled():
+    """With obs on, the serve.* metric family mirrors the report's
+    ledger exactly: batch/rejection/preemption counters, per-reason
+    close counters, the latency histogram, and the queue-depth gauge."""
+    obs.enable(fresh=True)
+    serve, rep = _serve_drive()
+    reg = obs.registry()
+    assert reg.get("serve.batches_closed").value == rep["batches"]
+    assert reg.get("serve.rejections").value == rep["rejected"]
+    for reason, n in rep["close_reasons"].items():
+        assert reg.get(f"serve.batch_close.{reason}").value == n
+    if rep["preemptions"]:
+        assert reg.get("serve.preemptions").value == rep["preemptions"]
+    hist = reg.get("serve.request_latency_us")
+    assert hist.count == rep["served"] == serve.slo.count
+    assert reg.get("serve.queue_depth").value == 0    # drained
+    assert reg.get("serve.batch_size").count == rep["batches"]
