@@ -281,7 +281,10 @@ class ServeEngine:
                 self._start_exec(tk, ingest)
             else:
                 batch = []
-                while q and len(batch) < self.cfg.max_batch:
+                while q and len(batch) < self.cfg.max_batch \
+                        and q[0].artifact.n_shots == 1:
+                    # a queued multi-shot plan ends the sweep: it must go
+                    # through iter_shots to stay preemptible
                     batch.append(q.popleft())
                 self._depth -= len(batch)
                 self._close(now, cls, reason, batch)
@@ -539,6 +542,9 @@ class Server:
             raise AdmissionError(
                 f"{artifact.name}: server is stopping — request refused")
         tk = Ticket(artifact, inputs)
+        # stamp arrival client-side so ingress-queue wait counts toward
+        # latency and max_wait_us/preempt_wait_us aging
+        tk.t_arrival = self.core.clock.now()
         self._ingress.put(tk)
         return tk
 
@@ -550,6 +556,18 @@ class Server:
         self._thread.join(timeout)
         if self._thread.is_alive():
             raise TimeoutError("serve worker failed to drain and stop")
+        # a submit() that raced past the _stopping check may have enqueued
+        # after the worker's final drain — reject it by name, don't strand it
+        now = self.core.clock.now()
+        while True:
+            try:
+                item = self._ingress.get_nowait()
+            except _queue.Empty:
+                break
+            if item is not _STOP:
+                self.core._refuse(item, now, AdmissionError(
+                    f"{item.artifact.name}: server stopped — request "
+                    f"refused"))
         return self.core.report()
 
     def __enter__(self) -> "Server":
@@ -573,7 +591,8 @@ class Server:
             if item is _STOP:
                 stop = True
             else:
-                self.core.offer(item.artifact, item.inputs, ticket=item)
+                self.core.offer(item.artifact, item.inputs,
+                                t=item.t_arrival, ticket=item)
             try:
                 item = self._ingress.get_nowait()
             except _queue.Empty:
@@ -588,6 +607,9 @@ class Server:
         while True:
             if self._drain_ingress(block=not stopping):
                 stopping = True
+            # _ingest_cb may have consumed _STOP mid-plan and recorded it
+            # only on the shared flag — fold it in or the drain never ends
+            stopping = stopping or self._stopping
             now = self.core.clock.now()
             self.core.check_liveness()
             pick = self.core._pick(now, can_wait=not stopping)
