@@ -20,6 +20,12 @@ The serve gate (ISSUE 8) replays a fixed-seed 200-request soak through
 are pinned exactly (the run is deterministic) and the p99 latency — in
 machine-independent virtual microseconds — must meet the pinned budget.
 
+The fleet gate (ISSUE 9) does the same for the multi-fabric scheduler: a
+fixed-seed 3-fabric soak with one fabric scripted to die mid-run pins
+served/rejected/failed *and* the fault-drain tally exactly, plus a
+virtual-time p99 budget — drift means placement, stealing, or the drain
+path changed behavior.
+
     PYTHONPATH=src python -m benchmarks.perf_smoke
 """
 from __future__ import annotations
@@ -175,6 +181,46 @@ def main(factor: float = 2.0, baseline_path: str = BASELINE_PATH) -> int:
             print(f"  serve p99 {p99:.1f} us > budget "
                   f"{sb['p99_budget_us']:.1f} us REGRESSED")
             failures.append(("serve", "p99_us", p99, sb["p99_budget_us"]))
+
+    # fleet smoke (ISSUE 9): a fixed-seed multi-fabric soak with one
+    # fabric scripted to die mid-run. Counts — including how many
+    # requests the fault-drain moved — are pinned exactly; the p99
+    # budget is virtual-time, so no factor/scale applies. A drift here
+    # means placement, stealing, or the drain path changed behavior.
+    fb = baseline.get("fleet")
+    if fb is not None:
+        from repro.engine import ArtifactCache
+        from repro.fleet import fleet_soak, homogeneous
+        cfg = homogeneous(fb["fabrics"], n_requests=fb["requests"],
+                          rate_per_us=fb["rate_per_us"],
+                          fail_at=((fb["fail_fabric"], fb["fail_at_us"]),))
+        _, frep = fleet_soak(fb["seed"], cfg,
+                             cache=ArtifactCache(memory_only=True))
+        fp99 = frep["latency"]["p99_us"]
+        print(f"  fleet gate: seed={fb['seed']} fabrics={fb['fabrics']} "
+              f"requests={fb['requests']} kill {fb['fail_fabric']}@"
+              f"{fb['fail_at_us']:g}us -> served={frep['served']} "
+              f"rejected={frep['rejected']} failed={frep['failed']} "
+              f"drained={frep['drained']} p99={fp99:.1f} us "
+              f"(budget {fb['p99_budget_us']:.1f} virtual us)")
+        for field in ("served", "rejected", "failed", "drained"):
+            if frep[field] != fb[field]:
+                print(f"  fleet {field} {frep[field]} != pinned "
+                      f"{fb[field]} ACCOUNTING DRIFTED")
+                failures.append(("fleet", field, frep[field], fb[field]))
+        ftotal = frep["served"] + frep["rejected"] + frep["failed"]
+        if frep["offered"] != fb["requests"] or ftotal != frep["offered"]:
+            print(f"  fleet accounting leak: offered={frep['offered']} "
+                  f"served+rejected+failed={ftotal}")
+            failures.append(("fleet", "accounting", ftotal,
+                             frep["offered"]))
+        if frep["dead"] != [fb["fail_fabric"]]:
+            failures.append(("fleet", "dead", frep["dead"],
+                             [fb["fail_fabric"]]))
+        if fp99 > fb["p99_budget_us"]:
+            print(f"  fleet p99 {fp99:.1f} us > budget "
+                  f"{fb['p99_budget_us']:.1f} us REGRESSED")
+            failures.append(("fleet", "p99_us", fp99, fb["p99_budget_us"]))
 
     # obs smoke: the entire bench ran through the instrumented pipeline
     # with observability disabled — not one span may have been recorded

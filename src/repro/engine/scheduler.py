@@ -86,16 +86,21 @@ class EngineStats:
     def config_cycles_saved(self) -> int:
         return self.config_cycles_naive - self.config_cycles_paid
 
-    def publish(self, registry=None) -> None:
+    def publish(self, registry=None,
+                prefix: str = "engine.stats.") -> None:
         """Snapshot every field into the obs metrics registry as
-        ``engine.stats.*`` gauges (no-op when obs is disabled)."""
+        ``<prefix>*`` gauges (no-op when obs is disabled).
+
+        The default prefix keeps the single-engine metric names of ISSUE
+        6; a fleet (``repro.fleet``) publishes each fabric worker's stats
+        under ``fleet.<fabric>.engine.`` so N engines never collide on
+        one gauge."""
         registry = registry if registry is not None else obs.registry()
         if registry is None:
             return
         for f in dataclasses.fields(self):
-            registry.gauge(f"engine.stats.{f.name}").set(
-                getattr(self, f.name))
-        registry.gauge("engine.stats.config_cycles_saved").set(
+            registry.gauge(f"{prefix}{f.name}").set(getattr(self, f.name))
+        registry.gauge(f"{prefix}config_cycles_saved").set(
             self.config_cycles_saved)
 
 

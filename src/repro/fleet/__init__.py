@@ -1,0 +1,25 @@
+"""Multi-fabric fleet scale-out for the serving engine (DESIGN.md §15).
+
+``repro.fleet`` shards the PR 8 serve request stream across N independent
+``Engine`` instances ("fabric workers"), each with its own geometry,
+artifact cache namespace, and per-class FIFO state:
+
+  * :class:`FleetConfig` / :class:`FabricSpec` — fleet shape + policy;
+  * :class:`FleetEngine` — the deterministic fleet scheduler (class-
+    affinity placement, work-stealing, fault-drain);
+  * :func:`fleet_soak` — the shared seeded end-to-end soak entry point;
+  * :mod:`repro.fleet.dse` — geometry design-space exploration + aligned
+    provisioning.
+"""
+from repro.fleet.config import (DEFAULT_CLASSES, FabricSpec, FleetConfig,
+                                homogeneous)
+from repro.fleet.placement import (ClassCost, Router, UnroutableError,
+                                   measure_class_costs)
+from repro.fleet.scheduler import (FabricWorker, FleetEngine, fleet_soak,
+                                   fleet_workload)
+
+__all__ = [
+    "DEFAULT_CLASSES", "FabricSpec", "FleetConfig", "homogeneous",
+    "ClassCost", "Router", "UnroutableError", "measure_class_costs",
+    "FabricWorker", "FleetEngine", "fleet_soak", "fleet_workload",
+]

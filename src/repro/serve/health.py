@@ -28,10 +28,13 @@ class LivenessProbe:
         from repro.runtime.fault_tolerance import Heartbeat, HealthMonitor
         self.directory = directory
         self.timeout_s = timeout_s
+        self.host_id = host_id
         self._hb = Heartbeat(directory, host_id)
-        # step_lag never fires with one worker; the wall timeout is the
-        # single-host liveness signal
-        self._monitor = HealthMonitor(directory, timeout_s=timeout_s)
+        # wall silence is the liveness signal; step lag is disabled —
+        # serve workers (and fleet fabric workers even more so)
+        # legitimately diverge in dispatch count
+        self._monitor = HealthMonitor(directory, timeout_s=timeout_s,
+                                      step_lag=None)
         self._step = 0
 
     def beat(self) -> int:
@@ -39,6 +42,11 @@ class LivenessProbe:
         self._step += 1
         self._hb.beat(self._step)
         return self._step
+
+    def retire(self) -> None:
+        """Remove this worker's heartbeat: a deliberately-drained fabric
+        must stop tripping the monitor."""
+        self._hb.clear()
 
     @property
     def step(self) -> int:

@@ -54,6 +54,29 @@ def bursty_arrival_times(rng: np.random.Generator, n: int, burst_size: int,
     return np.asarray(times[:n])
 
 
+def class_recipes(length: int, include_loops: bool = True,
+                  include_multishot: bool = True) -> Dict[str, tuple]:
+    """The standard serve workload mix as uncompiled recipes:
+    ``{label: (dfg_builder, compile_kwargs)}``.
+
+    The indirection exists for the multi-fabric fleet (``repro.fleet``):
+    each fabric worker compiles the same recipes against its *own*
+    geometry, and a recipe whose compile fails on a small fabric (e.g.
+    ``div_loop`` needs a 4x4) marks the class infeasible there instead of
+    killing the whole mix."""
+    recipes: Dict[str, tuple] = {
+        "relu": (K.relu, {}),
+        "vadd": (K.vadd, {}),
+        "fft": (K.fft_butterfly, {}),
+        "mac1": (lambda: K.mac1(length), {}),
+    }
+    if include_multishot:
+        recipes["axpby_ms"] = (lambda: K.axpby(3, 5), {"pe_limit": 1})
+    if include_loops:
+        recipes["div_loop"] = (lambda: K.div_loop(7), {})
+    return recipes
+
+
 def serve_classes(engine, length: int, include_loops: bool = True,
                   include_multishot: bool = True) -> Dict[str, object]:
     """Compile the standard serve workload mix on ``engine``; returns
@@ -65,17 +88,10 @@ def serve_classes(engine, length: int, include_loops: bool = True,
     the preemptible long request), and an irregular loop (div_loop,
     data-dependent trip count). ``include_loops=False`` keeps the mix
     inside the pallas capability set (loop state is sim-only)."""
-    classes = {
-        "relu": engine.compile(K.relu()),
-        "vadd": engine.compile(K.vadd()),
-        "fft": engine.compile(K.fft_butterfly()),
-        "mac1": engine.compile(K.mac1(length)),
-    }
-    if include_multishot:
-        classes["axpby_ms"] = engine.compile(K.axpby(3, 5), pe_limit=1)
-    if include_loops:
-        classes["div_loop"] = engine.compile(K.div_loop(7))
-    return classes
+    return {label: engine.compile(fn(), **kw)
+            for label, (fn, kw) in class_recipes(
+                length, include_loops=include_loops,
+                include_multishot=include_multishot).items()}
 
 
 def request_inputs(artifact, length: int,
@@ -89,15 +105,21 @@ def request_inputs(artifact, length: int,
             for name in g.inputs}
 
 
-def make_requests(classes: Dict[str, object], times: Sequence[float],
-                  length: int, rng: np.random.Generator,
-                  weights: Optional[Dict[str, float]] = None
-                  ) -> List[Tuple[float, object, Dict[str, np.ndarray]]]:
-    """Assign each arrival time a seeded class choice + input streams.
+def make_labeled_requests(classes: Dict[str, object],
+                          times: Sequence[float], length: int,
+                          rng: np.random.Generator,
+                          weights: Optional[Dict[str, float]] = None
+                          ) -> List[Tuple[float, str,
+                                          Dict[str, np.ndarray]]]:
+    """Assign each arrival time a seeded class choice + input streams,
+    keyed by class *label* instead of a compiled artifact.
 
-    Returns ``[(t_us, artifact, inputs), ...]`` sorted by time — exactly
-    the shape :meth:`repro.serve.ServeEngine.drive` ingests. ``weights``
-    biases the class mix (default uniform)."""
+    Returns ``[(t_us, label, inputs), ...]`` sorted by time — the shape
+    :meth:`repro.fleet.FleetEngine.drive` ingests (the fleet re-binds
+    each label to the target fabric's geometry-specific artifact).
+    Consumes the rng identically to :func:`make_requests`, so the same
+    seed yields the same request stream either way — that is what lets a
+    fleet soak be digest-compared against a single-engine oracle."""
     labels = sorted(classes)
     if weights is None:
         p = np.full(len(labels), 1.0 / len(labels))
@@ -107,7 +129,22 @@ def make_requests(classes: Dict[str, object], times: Sequence[float],
     picks = rng.choice(len(labels), size=len(times), p=p)
     reqs = []
     for t, k in zip(times, picks):
-        art = classes[labels[int(k)]]
-        reqs.append((float(t), art, request_inputs(art, length, rng)))
+        label = labels[int(k)]
+        reqs.append((float(t), label,
+                     request_inputs(classes[label], length, rng)))
     reqs.sort(key=lambda r: r[0])
     return reqs
+
+
+def make_requests(classes: Dict[str, object], times: Sequence[float],
+                  length: int, rng: np.random.Generator,
+                  weights: Optional[Dict[str, float]] = None
+                  ) -> List[Tuple[float, object, Dict[str, np.ndarray]]]:
+    """Assign each arrival time a seeded class choice + input streams.
+
+    Returns ``[(t_us, artifact, inputs), ...]`` sorted by time — exactly
+    the shape :meth:`repro.serve.ServeEngine.drive` ingests. ``weights``
+    biases the class mix (default uniform)."""
+    return [(t, classes[label], ins)
+            for t, label, ins in make_labeled_requests(
+                classes, times, length, rng, weights)]

@@ -196,6 +196,28 @@ class ServeEngine:
         obs.set_gauge("serve.queue_depth", self._depth)
         return tk
 
+    def requeue(self, tk: Ticket) -> None:
+        """Re-admit an already-admitted ticket drained from a failed peer
+        (fleet fault-drain, DESIGN.md §15) WITHOUT re-counting it as
+        offered or re-assigning its rid.
+
+        The ticket keeps its original arrival stamp (queue age keeps
+        counting toward deadlines and preemption), and it is inserted
+        into its class FIFO in rid order, so class-FIFO completion order
+        survives a drain. A paused multi-shot ticket restarts from shot
+        zero here — re-execution is bit-exact, so no partial state needs
+        to move."""
+        now = self.clock.now()
+        tk.status = QUEUED
+        q = self._queues.setdefault(tk.cls, deque())
+        pos = len(q)
+        while pos > 0 and q[pos - 1].rid > tk.rid:
+            pos -= 1
+        q.insert(pos, tk)
+        self._depth += 1
+        self._trace("requeue", now, tk.rid, tk.cls)
+        obs.set_gauge("serve.queue_depth", self._depth)
+
     def _refuse(self, tk: Ticket, now: float,
                 err: AdmissionError) -> Ticket:
         tk._reject(err, now)
@@ -464,6 +486,19 @@ class ServeEngine:
                 dl = self._next_deadline()
                 if dl is not None:
                     nxt = min(nxt, dl)
+                if nxt <= now:
+                    # float plateau: ``head + max_wait_us`` rounds down to
+                    # ``now`` while _pick's expiry comparison still judges
+                    # the head not-yet-due by one ulp — advance_to cannot
+                    # move the clock and the loop would spin forever. The
+                    # head IS at its deadline within float precision:
+                    # dispatch it. (Every arrival <= now was already
+                    # ingested, so nxt <= now implies the deadline side.)
+                    work = self._work_classes()
+                    heads = {c: self._head_arrival(c) for c in work}
+                    self._dispatch(min(work, key=lambda c: (heads[c], c)),
+                                   "deadline", ingest)
+                    continue
                 self.clock.advance_to(nxt)
                 continue
             break                           # no work, no future arrivals
@@ -491,6 +526,21 @@ class ServeEngine:
                     np.asarray(tk.outputs[name], dtype=np.int64)).tobytes())
         return h.hexdigest()
 
+    def steady_window_us(self) -> Optional[float]:
+        """Width of the steady-state service window: first arrival of any
+        *served* (admitted-and-completed) request to the last completion.
+        The wall figure (``now_us``) additionally counts the pre-traffic
+        lead-in and the drain tail after the final admission, so
+        ``served / now_us`` understates sustained throughput — under
+        light load most of the wall duration is drain (ISSUE 9 satellite:
+        throughput_rps below offered_rps with zero rejections). ``None``
+        until something was served."""
+        if not self.served:
+            return None
+        t0 = min(tk.t_arrival for tk in self.served)
+        t1 = max(tk.t_done for tk in self.served)
+        return t1 - t0
+
     def report(self) -> Dict:
         st = self.engine.stats
         return {
@@ -506,6 +556,7 @@ class ServeEngine:
             "config_cycles_naive": st.config_cycles_naive,
             "config_cycles_saved": st.config_cycles_saved,
             "now_us": self.clock.now(),
+            "steady_window_us": self.steady_window_us(),
             "latency": self.slo.report(),
             "trace_digest": self.trace_digest(),
         }

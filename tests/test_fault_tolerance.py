@@ -1,0 +1,175 @@
+"""runtime/fault_tolerance unit tests (ISSUE 9 satellite).
+
+The fleet's fault-drain path (DESIGN.md §15) is wired over the seed
+runtime's heartbeat primitives, so those primitives get direct coverage
+here: :class:`Heartbeat` publish/expiry/retire semantics,
+:class:`HealthMonitor` verdict transitions (live -> stalled -> recovered)
+under both the wall-silence and step-lag signals, the ``step_lag=None``
+serving-side mode, and the idempotency of the two drain entry points
+(``ServeEngine.drain_class`` and ``FleetEngine.fail_fabric``).
+
+Everything runs on explicit ``t``/``now`` overrides — no sleeping, no
+wall-clock flakiness.
+"""
+import json
+import os
+
+import numpy as np
+
+from repro.engine import ArtifactCache
+from repro.fleet import FleetEngine, fleet_workload, homogeneous
+from repro.runtime.fault_tolerance import Heartbeat, HealthMonitor
+from repro.serve import AdmissionError
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_publish_and_read(tmp_path):
+    hb = Heartbeat(str(tmp_path), host_id=3)
+    hb.beat(7, t=100.0)
+    mon = HealthMonitor(str(tmp_path), timeout_s=5.0)
+    beats = mon.read()
+    assert beats == {3: {"step": 7, "t": 100.0}}
+    # a later beat atomically replaces the record
+    hb.beat(8, t=101.5)
+    assert mon.read()[3] == {"step": 8, "t": 101.5}
+
+
+def test_heartbeat_expiry_on_wall_silence(tmp_path):
+    hb = Heartbeat(str(tmp_path), host_id=0)
+    hb.beat(1, t=100.0)
+    mon = HealthMonitor(str(tmp_path), timeout_s=5.0, step_lag=None)
+    assert mon.states(now=104.9) == {0: "live"}
+    assert mon.states(now=105.0) == {0: "live"}     # boundary: not > timeout
+    assert mon.states(now=105.1) == {0: "stalled"}
+    assert mon.stalled(now=200.0) == [0]
+
+
+def test_heartbeat_clear_retires_host(tmp_path):
+    hb = Heartbeat(str(tmp_path), host_id=0)
+    hb.beat(1, t=0.0)
+    mon = HealthMonitor(str(tmp_path), timeout_s=1.0)
+    assert mon.stalled(now=100.0) == [0]
+    hb.clear()
+    # retired host no longer appears in any verdict — it must not trip
+    # the monitor as stalled forever
+    assert mon.states(now=100.0) == {}
+    assert mon.stalled(now=100.0) == []
+    hb.clear()                                       # idempotent
+    assert not os.path.exists(hb.path)
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor verdicts
+# ---------------------------------------------------------------------------
+
+def test_monitor_transitions_live_stalled_recovered(tmp_path):
+    hb = Heartbeat(str(tmp_path), host_id=2)
+    mon = HealthMonitor(str(tmp_path), timeout_s=10.0, step_lag=None)
+    hb.beat(1, t=0.0)
+    assert mon.states(now=5.0) == {2: "live"}
+    assert mon.states(now=20.0) == {2: "stalled"}
+    hb.beat(2, t=21.0)                               # host recovers
+    assert mon.states(now=25.0) == {2: "live"}
+
+
+def test_monitor_step_lag_flags_trailing_host(tmp_path):
+    a, b = Heartbeat(str(tmp_path), 0), Heartbeat(str(tmp_path), 1)
+    mon = HealthMonitor(str(tmp_path), timeout_s=1e9, step_lag=5)
+    a.beat(100, t=0.0)
+    b.beat(96, t=0.0)
+    assert mon.states(now=0.0) == {0: "live", 1: "live"}   # lag 4 <= 5
+    b.beat(94, t=0.0)
+    assert mon.states(now=0.0) == {0: "live", 1: "stalled"}
+    assert mon.stalled(now=0.0) == [1]
+
+
+def test_monitor_step_lag_none_judges_wall_only(tmp_path):
+    # serving-side mode: fabric workers legitimately diverge in dispatch
+    # count, so arbitrary step lag must never flag a fresh heartbeat
+    a, b = Heartbeat(str(tmp_path), 0), Heartbeat(str(tmp_path), 1)
+    mon = HealthMonitor(str(tmp_path), timeout_s=5.0, step_lag=None)
+    a.beat(10_000, t=100.0)
+    b.beat(1, t=100.0)
+    assert mon.states(now=101.0) == {0: "live", 1: "live"}
+    b.beat(2, t=101.0)
+    assert mon.states(now=105.5) == {0: "stalled", 1: "live"}
+
+
+def test_monitor_ignores_corrupt_heartbeat(tmp_path):
+    Heartbeat(str(tmp_path), 0).beat(1, t=0.0)
+    with open(os.path.join(str(tmp_path), "host_00001.hb"), "w") as f:
+        f.write("not json{")
+    mon = HealthMonitor(str(tmp_path), timeout_s=5.0)
+    assert set(mon.read()) == {0}
+    assert mon.states(now=1.0) == {0: "live"}
+
+
+def test_monitor_empty_and_missing_directory(tmp_path):
+    mon = HealthMonitor(str(tmp_path / "nope"), timeout_s=5.0)
+    assert mon.read() == {}
+    assert mon.states(now=0.0) == {}
+    assert mon.stalled(now=0.0) == []
+
+
+# ---------------------------------------------------------------------------
+# double-drain idempotency
+# ---------------------------------------------------------------------------
+
+def _small_fleet(n=2, **kw):
+    cfg = homogeneous(n, n_requests=40, rate_per_us=0.2,
+                      classes=("relu", "vadd"), **kw)
+    cache = ArtifactCache(memory_only=True)
+    fleet = FleetEngine(cfg, cache=cache)
+    return fleet, fleet_workload(11, cfg, cache=cache)
+
+
+def test_serve_drain_class_twice_is_idempotent():
+    fleet, arrivals = _small_fleet()
+    w = fleet.workers[0]
+    # park a few requests in one worker's queue without dispatching
+    for t, label, inputs in arrivals[:4]:
+        w.serve.offer(w.artifacts[label], inputs, t=t)
+    cls = w.artifacts["relu"].config_class
+    first = w.serve.drain_class(cls, "test stall")
+    assert first and all(isinstance(tk.error, AdmissionError)
+                         for tk in first)
+    assert w.serve.drain_class(cls, "test stall") == []
+    # rejected ledger saw each ticket exactly once
+    rids = [tk.rid for tk in w.serve.rejected]
+    assert len(rids) == len(set(rids))
+
+
+def test_fleet_fail_fabric_twice_is_noop():
+    fleet, arrivals = _small_fleet()
+    for t, label, inputs in arrivals[:8]:
+        fleet._route(t, label, inputs)
+    moved = fleet.fail_fabric("f0", t=arrivals[7][0])
+    assert not fleet.workers[0].alive and "f0" in fleet.dead
+    trace_after = list(fleet.trace)
+    assert fleet.fail_fabric("f0", t=arrivals[7][0] + 1.0) == []
+    assert fleet.trace == trace_after       # second kill left no residue
+    assert fleet.drained == len(moved) or fleet.drained <= len(moved)
+    # drained tickets moved to the surviving peer exactly once
+    rids = [tk.rid for q in fleet.workers[1].serve._queues.values()
+            for tk in q]
+    assert len(rids) == len(set(rids))
+
+
+def test_fleet_check_health_fails_stalled_fabric(tmp_path):
+    cfg = homogeneous(2, n_requests=20, rate_per_us=0.2,
+                      classes=("relu", "vadd"))
+    cache = ArtifactCache(memory_only=True)
+    fleet = FleetEngine(cfg, cache=cache, hb_dir=str(tmp_path),
+                        timeout_s=5.0)
+    t0 = 1_000_000.0
+    fleet.workers[0].probe._hb.beat(1, t=t0)
+    fleet.workers[1].probe._hb.beat(1, t=t0 + 100.0)
+    failed = fleet.check_health(now=t0 + 100.0)
+    assert failed == ["f0"]
+    assert not fleet.workers[0].alive and fleet.workers[1].alive
+    # a failed fabric is retired: its heartbeat is gone, so a second
+    # health sweep has nothing left to flag
+    assert fleet.check_health(now=t0 + 100.0) == []

@@ -1,0 +1,337 @@
+"""repro.fleet tests (ISSUE 9): multi-fabric fleet scale-out contracts.
+
+  * **oracle** — a seeded fleet soak's served outputs are bit-exact
+    against one plain ``Engine.run`` per request on a single 4x4
+    (digest-asserted): sharding must never change values;
+  * **determinism** — the fixed-seed soak (including a scripted mid-soak
+    fabric failure) replays bit-identically in-process and across two OS
+    processes (trace digest + results digest);
+  * **accounting** — offered == served + rejected + failed fleet-wide
+    (unroutable rejections included), rids globally unique, both with
+    and without a mid-soak failure;
+  * **placement** — class pins land on the measured-cheapest feasible
+    fabric, homogeneous ties spread round-robin, deep pinned queues
+    overflow to the least-loaded feasible peer (work-stealing), and a
+    class no live fabric can serve is rejected *by name*;
+  * **fault-drain** — killing a fabric moves its backlog to surviving
+    peers in rid order (class-FIFO completion survives), loses nothing,
+    duplicates nothing, and a double-kill is a no-op;
+  * **DSE** — the geometry sweep ranks real measured costs and
+    ``provision`` always yields a fleet that can serve the whole mix.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.engine import ArtifactCache, Engine
+from repro.core.fabric import Fabric
+from repro.fleet import (DEFAULT_CLASSES, FabricSpec, FleetConfig,
+                         FleetEngine, Router, UnroutableError, fleet_soak,
+                         fleet_workload, homogeneous, measure_class_costs)
+from repro.fleet import dse
+from repro.serve import AdmissionError
+from repro.serve.load import serve_classes
+
+LENGTH = 32
+SHORT = ("relu", "vadd", "mac1")
+
+
+def _cache():
+    return ArtifactCache(memory_only=True)
+
+
+def _soak(seed=7, n=120, rate=0.4, classes=SHORT, fabrics=2, **kw):
+    cfg = homogeneous(fabrics, n_requests=n, rate_per_us=rate,
+                      classes=classes, length=LENGTH, **kw)
+    return fleet_soak(seed, cfg, cache=_cache())
+
+
+# ---------------------------------------------------------------------------
+# oracle + accounting
+# ---------------------------------------------------------------------------
+
+def test_fleet_results_bit_exact_vs_single_engine_oracle():
+    cfg = homogeneous(3, n_requests=150, rate_per_us=0.5,
+                      classes=DEFAULT_CLASSES, length=LENGTH)
+    cache = _cache()
+    fleet, rep = fleet_soak(9, cfg, cache=cache)
+    assert rep["served"] > 0
+    # oracle: same arrival stream, one plain Engine.run per request
+    ref = Engine(Fabric(), backend="sim", cache=cache)
+    classes = serve_classes(ref, LENGTH)
+    arrivals = fleet_workload(9, cfg, cache=cache)
+    outs = {rid: ref.run(classes[label], inputs)
+            for rid, (_, label, inputs) in enumerate(arrivals)}
+    for tk in fleet.served_tickets():
+        want = outs[tk.rid]
+        assert sorted(tk.outputs) == sorted(want)
+        for name in want:
+            np.testing.assert_array_equal(
+                np.asarray(tk.outputs[name]), np.asarray(want[name]),
+                err_msg=f"rid {tk.rid} output {name} diverged")
+
+
+def test_fleet_accounting_no_loss_no_duplicates():
+    fleet, rep = _soak(n=200, rate=1.5, queue_capacity=6)
+    assert rep["offered"] == 200
+    assert rep["served"] + rep["rejected"] + rep["failed"] == 200
+    assert rep["rejected"] > 0          # overdriven tiny queues must shed
+    rids = [tk.rid for tk in fleet.served_tickets()]
+    rids += [tk.rid for w in fleet.workers for tk in w.serve.rejected]
+    assert len(rids) == len(set(rids))
+    # per-fabric ledgers sum to the fleet totals
+    pf = rep["per_fabric"].values()
+    assert sum(f["served"] for f in pf) == rep["served"]
+    assert sum(f["rejected"] for f in pf) + rep["unroutable"] \
+        == rep["rejected"]
+
+
+def test_fleet_report_shapes():
+    _, rep = _soak(n=60)
+    assert rep["fabrics"] == 2
+    assert set(rep["placements"]) == set(SHORT)
+    assert rep["steady_window_us"] and rep["steady_throughput_rps"] > 0
+    for f in rep["per_fabric"].values():
+        assert f["geometry"] == [4, 4, 4, 4]
+        assert 0.0 <= f["utilization"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# determinism (in-process and cross-process, with a scripted failure)
+# ---------------------------------------------------------------------------
+
+def test_fleet_soak_replays_bit_identically_in_process():
+    kw = dict(seed=13, n=150, rate=0.8, fabrics=3,
+              fail_at=(("f1", 60.0),))
+    f1, r1 = _soak(**kw)
+    f2, r2 = _soak(**kw)
+    assert r1["trace_digest"] == r2["trace_digest"]
+    assert f1.results_digest() == f2.results_digest()
+    assert r1["dead"] == ["f1"] and r1["drained"] == r2["drained"]
+
+
+def test_fleet_cross_process_determinism_with_mid_soak_failure():
+    prog = (
+        "from repro.engine import ArtifactCache\n"
+        "from repro.fleet import fleet_soak, homogeneous\n"
+        "cfg = homogeneous(3, n_requests=150, rate_per_us=0.8,\n"
+        "                  classes=('relu', 'vadd', 'mac1'), length=32,\n"
+        "                  fail_at=(('f1', 60.0),))\n"
+        "fleet, rep = fleet_soak(13, cfg,\n"
+        "                        cache=ArtifactCache(memory_only=True))\n"
+        "print(rep['trace_digest'], fleet.results_digest())\n")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join([os.path.join(root, "src"), root]),
+               STRELA_CACHE="0")
+    digests = set()
+    for _ in range(2):
+        out = subprocess.run([sys.executable, "-c", prog], cwd=root,
+                             env=env, capture_output=True, text=True,
+                             check=True)
+        digests.add(out.stdout.strip())
+    assert len(digests) == 1, f"cross-process fleet replay diverged: {digests}"
+    fleet, rep = _soak(seed=13, n=150, rate=0.8, fabrics=3,
+                       fail_at=(("f1", 60.0),))
+    here = f"{rep['trace_digest']} {fleet.results_digest()}"
+    assert digests == {here}, (digests, here)
+
+
+# ---------------------------------------------------------------------------
+# placement: pins, stealing, unroutable
+# ---------------------------------------------------------------------------
+
+def test_pins_prefer_measured_cheapest_geometry():
+    cache = _cache()
+    ranked = dse.sweep(classes=DEFAULT_CLASSES, length=LENGTH, cache=cache)
+    cfg = FleetConfig(fabrics=(
+        FabricSpec(name="small", rows=2, cols=2, n_imns=2, n_omns=2),
+        FabricSpec(name="big")), classes=DEFAULT_CLASSES, length=LENGTH)
+    fleet = FleetEngine(cfg, cache=cache)
+    # the sweep and the fleet measured the same physics: each class pins
+    # to whichever of the two geometries the sweep ranks cheaper
+    for label in DEFAULT_CLASSES:
+        best = next(c.geometry for c in ranked[label] if c.feasible)
+        want = "small" if best == (2, 2, 2, 2) else "big"
+        feas = {c.geometry for c in ranked[label] if c.feasible}
+        if (2, 2, 2, 2) not in feas:
+            want = "big"                # e.g. div_loop: 4x4 only
+        assert fleet.router.pin(label) == want, label
+
+
+def test_homogeneous_pins_spread_round_robin():
+    fleet, _ = _soak(n=10, classes=DEFAULT_CLASSES, fabrics=4,
+                     rate=0.05)
+    owners = [fleet.router.pin(l) for l in sorted(DEFAULT_CLASSES)]
+    # 6 classes over 4 identical fabrics: every fabric gets at least one
+    # pin and none gets more than two
+    assert set(owners) == {"f0", "f1", "f2", "f3"}
+    assert max(owners.count(w) for w in set(owners)) == 2
+
+
+def test_work_stealing_overflows_deep_pinned_queue():
+    fleet, rep = _soak(seed=1, n=200, rate=2.0, classes=("relu",),
+                       fabrics=3, steal_depth=2)
+    assert rep["steals"] > 0
+    stolen_to = {ev[4] for ev in fleet.trace
+                 if ev[0] == "route" and ev[5] == "steal"}
+    assert stolen_to and "f0" not in stolen_to   # pin is f0; steals go out
+    served_by = {w.name: len(w.serve.served) for w in fleet.workers}
+    assert sum(1 for n in served_by.values() if n > 0) >= 2
+
+
+def test_router_steal_picks_least_loaded_feasible_peer():
+    costs = {w: {"k": __import__("repro.fleet.placement",
+                                 fromlist=["ClassCost"]).ClassCost(
+        label="k", geometry=(4, 4, 4, 4), feasible=True, service_us=1.0)}
+        for w in ("a", "b", "c")}
+    r = Router(["a", "b", "c"], costs, steal_depth=2)
+    assert r.pin("k") == "a"
+    name, how = r.place("k", {"a": 5, "b": 1, "c": 1},
+                        {"a": 9.0, "b": 4.0, "c": 2.0}, frozenset())
+    assert (name, how) == ("c", "steal")
+    # below steal_depth the pin holds regardless of load
+    assert r.place("k", {"a": 1}, {"a": 9.0}, frozenset()) == ("a", "pin")
+    with pytest.raises(UnroutableError):
+        r.place("k", {}, {}, frozenset({"a", "b", "c"}))
+
+
+def test_unroutable_class_rejected_by_name_after_fabric_death():
+    # div_loop maps only on the 4x4; kill it mid-soak and every div
+    # request after the failure must be rejected with a named error —
+    # never silently dropped, never misrouted onto a 2x2
+    cfg = FleetConfig(
+        fabrics=(FabricSpec(name="s0", rows=2, cols=2, n_imns=2, n_omns=2),
+                 FabricSpec(name="s1", rows=2, cols=2, n_imns=2, n_omns=2),
+                 FabricSpec(name="big")),
+        classes=("relu", "div_loop"), length=LENGTH,
+        n_requests=80, rate_per_us=0.2, fail_at=(("big", 100.0),))
+    fleet, rep = fleet_soak(3, cfg, cache=_cache())
+    assert rep["dead"] == ["big"]
+    assert rep["offered"] == 80
+    assert rep["served"] + rep["rejected"] + rep["failed"] == 80
+    assert fleet.unroutable, "no div arrivals after the failure?"
+    for tk in fleet.unroutable:
+        assert isinstance(tk.error, AdmissionError)
+        assert "div_loop" in str(tk.error)
+    # relu kept flowing on the survivors
+    assert any(len(w.serve.served) > 0 for w in fleet.workers[:2])
+
+
+def test_fleet_init_rejects_globally_infeasible_class():
+    cfg = FleetConfig(
+        fabrics=(FabricSpec(name="s0", rows=2, cols=2, n_imns=2,
+                            n_omns=2),),
+        classes=("relu", "div_loop"), length=LENGTH)
+    with pytest.raises(ValueError, match="div_loop"):
+        FleetEngine(cfg, cache=_cache())
+
+
+# ---------------------------------------------------------------------------
+# fault-drain
+# ---------------------------------------------------------------------------
+
+def test_fault_drain_loses_nothing_and_keeps_class_fifo():
+    fleet, rep = _soak(seed=21, n=250, rate=1.2, fabrics=3,
+                       fail_at=(("f0", 50.0),))
+    assert rep["offered"] == 250
+    assert rep["served"] + rep["rejected"] + rep["failed"] == 250
+    assert rep["drained"] > 0 and rep["dead"] == ["f0"]
+    rids = [tk.rid for tk in fleet.served_tickets()]
+    assert len(rids) == len(set(rids))
+
+
+def test_fault_drain_requeues_in_rid_order():
+    # route a backlog by hand (no pumping, nothing dispatches), then kill
+    # f0: every surviving class FIFO must hold its tickets in rid order —
+    # drained tickets splice *into* the peers' queues, not onto the end
+    cfg = homogeneous(3, n_requests=40, rate_per_us=0.2, classes=SHORT,
+                      length=LENGTH)
+    cache = _cache()
+    fleet = FleetEngine(cfg, cache=cache)
+    for t, label, inputs in fleet_workload(21, cfg, cache=cache)[:24]:
+        fleet._route(t, label, inputs)
+    assert any(q for q in fleet.workers[0].serve._queues.values())
+    fleet.fail_fabric("f0", t=1e6)
+    assert fleet.drained > 0
+    for w in fleet.workers[1:]:
+        for cls, q in w.serve._queues.items():
+            seq = [tk.rid for tk in q]
+            assert seq == sorted(seq), (w.name, cls, seq)
+
+
+def test_fail_fabric_is_idempotent_and_dead_gets_no_routes():
+    fleet, rep = _soak(seed=21, n=250, rate=1.2, fabrics=3,
+                       fail_at=(("f0", 50.0),))
+    # no route or drain ever targeted the dead fabric after its death
+    for ev in fleet.trace:
+        if ev[0] == "route" and ev[1] >= 50.0:
+            assert ev[4] != "f0", ev
+        if ev[0] == "drain":
+            assert ev[4] != "f0", ev
+    assert fleet.fail_fabric("f0") == []
+    assert rep["per_fabric"]["f0"]["alive"] is False
+
+
+# ---------------------------------------------------------------------------
+# DSE + provisioning
+# ---------------------------------------------------------------------------
+
+def test_dse_sweep_ranks_real_costs():
+    ranked = dse.sweep(classes=("relu", "fft", "div_loop"), length=LENGTH,
+                       cache=_cache())
+    relu = ranked["relu"]
+    assert relu[0].feasible and relu[0].geometry == (2, 2, 2, 2)
+    assert [c.service_us for c in relu if c.feasible] == sorted(
+        c.service_us for c in relu if c.feasible)
+    # fft inverts: needs column width, so 4x4 beats 2x2 hard
+    fft = ranked["fft"]
+    assert fft[0].geometry == (4, 4, 4, 4)
+    # div_loop is 4x4-only, and the infeasible entries carry named errors
+    div = ranked["div_loop"]
+    assert next(c.geometry for c in div if c.feasible) == (4, 4, 4, 4)
+    assert all(c.error for c in div if not c.feasible)
+
+
+def test_provision_always_covers_the_mix():
+    cache = _cache()
+    ranked = dse.sweep(classes=DEFAULT_CLASSES, length=LENGTH, cache=cache)
+    for n in (1, 2, 4):
+        cfg = dse.provision(ranked, n, length=LENGTH)
+        assert len(cfg.fabrics) == n
+        # must construct: FleetEngine raises if any class is uncovered
+        FleetEngine(cfg, cache=cache)
+    # short-kernel-heavy weighting pulls in small fabrics but must keep
+    # one div_loop-capable 4x4 (the feasibility repair pass)
+    cfg = dse.provision(ranked, 4, weights={"relu": 10.0, "vadd": 10.0},
+                        length=LENGTH)
+    geos = [s.geometry for s in cfg.fabrics]
+    assert (4, 4, 4, 4) in geos and (2, 2, 2, 2) in geos
+
+
+def test_measure_class_costs_names_infeasibility():
+    costs, arts = measure_class_costs((2, 2, 2, 2), ("relu", "div_loop"),
+                                      LENGTH, 0.01, 8, cache=_cache())
+    assert costs["relu"].feasible and "relu" in arts
+    assert not costs["div_loop"].feasible and "div_loop" not in arts
+    assert costs["div_loop"].error
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError, match="unique"):
+        FleetConfig(fabrics=(FabricSpec(name="x"), FabricSpec(name="x")))
+    with pytest.raises(ValueError, match="steal_depth"):
+        homogeneous(2, steal_depth=0)
+    with pytest.raises(ValueError, match="fail_at"):
+        homogeneous(2, fail_at=(("nope", 1.0),))
+    with pytest.raises(ValueError, match="weights"):
+        homogeneous(2, weights=(("nope", 1.0),))
+    with pytest.raises(ValueError):
+        FleetConfig(fabrics=())

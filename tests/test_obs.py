@@ -437,3 +437,47 @@ def test_serve_metrics_complete_when_enabled():
     assert hist.count == rep["served"] == serve.slo.count
     assert reg.get("serve.queue_depth").value == 0    # drained
     assert reg.get("serve.batch_size").count == rep["batches"]
+
+
+# ---------------------------------------------------------------------------
+# fleet metrics (ISSUE 9): fleet.* family + zero-overhead-when-disabled
+# ---------------------------------------------------------------------------
+
+def _fleet_soak():
+    from repro.engine import ArtifactCache
+    from repro.fleet import fleet_soak, homogeneous
+
+    cfg = homogeneous(2, n_requests=80, rate_per_us=1.0, steal_depth=2,
+                      classes=("relu", "vadd"), length=32,
+                      fail_at=(("f1", 30.0),))
+    return fleet_soak(4, cfg, cache=ArtifactCache(memory_only=True))
+
+
+def test_fleet_metrics_zero_overhead_when_disabled():
+    """A full fleet soak — routing, stealing, a mid-soak fabric failure
+    with drain — at the disabled default leaves zero observability
+    residue: the fleet.* instrumentation sits behind the same single
+    None-check as the engine's and the serve loop's."""
+    assert not obs.enabled()
+    _, rep = _fleet_soak()
+    assert rep["steals"] > 0 and rep["drained"] > 0   # both paths ran
+    assert obs.ring_len() == 0
+    assert obs.registry() is None and obs.tracer() is None
+
+
+def test_fleet_metrics_complete_when_enabled():
+    """With obs on, the per-fabric fleet.* gauges and fleet counters
+    mirror the report ledger exactly."""
+    obs.enable(fresh=True)
+    fleet, rep = _fleet_soak()
+    reg = obs.registry()
+    assert reg.get("fleet.steals").value == rep["steals"]
+    assert reg.get("fleet.drains").value == rep["drained"]
+    assert reg.get("fleet.failures").value == len(rep["dead"]) == 1
+    for w in fleet.workers:
+        assert reg.get(f"fleet.{w.name}.queue_depth").value == 0  # drained
+        util = reg.get(f"fleet.{w.name}.utilization").value
+        assert util == rep["per_fabric"][w.name]["utilization"]
+        # the per-fabric engine ledgers publish under the fabric prefix
+        assert reg.get(f"fleet.{w.name}.engine.requests").value \
+            == w.engine.stats.requests

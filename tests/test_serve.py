@@ -627,3 +627,24 @@ def test_batch_sweep_stops_at_queued_multishot():
     want = oracle.run(oms, tk.inputs)
     for k in want:
         np.testing.assert_array_equal(tk.outputs[k], want[k])
+
+
+def test_report_steady_window_bounds_the_service_span():
+    """``steady_window_us`` spans first served arrival -> last completion:
+    strictly positive, never wider than the wall duration, and the steady
+    throughput it implies is at least the wall figure (the wall duration
+    additionally counts the lead-in and drain tail — ISSUE 9 satellite:
+    honest sustained-rate accounting for the benchmarks)."""
+    serve, _, rep = _drive(3, 120, rate_per_us=0.02)
+    steady = rep["steady_window_us"]
+    assert steady == serve.steady_window_us()
+    assert 0 < steady <= rep["now_us"]
+    wall_rps = rep["served"] / rep["now_us"]
+    assert rep["served"] / steady >= wall_rps
+    first = min(tk.t_arrival for tk in serve.served)
+    last = max(tk.t_done for tk in serve.served)
+    assert steady == pytest.approx(last - first)
+    # no served requests -> no window
+    empty = ServeEngine(_engine(), ServeConfig())
+    empty.drive([])
+    assert empty.steady_window_us() is None
