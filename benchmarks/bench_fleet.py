@@ -22,6 +22,11 @@ deterministic virtual time (modeled fabric cycles, machine-independent):
   * **fault-drain** — one fabric is killed mid-soak; zero admitted
     requests may be lost, none duplicated, and a second run must replay
     the post-failure schedule bit-identically (trace digests equal).
+  * **model mix** (ISSUE 10) — the transformer/SSM/MoE workload classes
+    of ``repro.workloads`` served across a 2-fabric fleet: every served
+    response is re-verified bit-exactly against its ``jnp`` oracle and a
+    cold-cache second run must replay digest-identically — the fleet
+    half of the workload conformance gate.
 
 CLI::
 
@@ -250,6 +255,70 @@ def run_fault_drain(cache: ArtifactCache) -> dict:
     }
 
 
+# model-mix section (ISSUE 10): the pinned 2-fabric operating point of
+# tests/test_workloads.py's fleet soak, promoted to a benchmark row set
+MODEL_SEED = 11
+MODEL_REQUESTS = 80
+MODEL_RATE_PER_US = 0.25
+
+
+def run_model_fleet(cache: ArtifactCache) -> dict:
+    """The transformer/SSM/MoE workload mix (``repro.workloads``) across
+    a 2-fabric fleet — the fleet half of the ISSUE 10 differential gate:
+    every served response re-verified bit-exactly against its ``jnp``
+    oracle, plus a cold-cache digest-identical replay."""
+    from repro.serve.load import model_classes
+    from repro.workloads import MODEL_CLASSES, MODEL_MIX, model_weights
+
+    cfg = homogeneous(2, n_requests=MODEL_REQUESTS,
+                      rate_per_us=MODEL_RATE_PER_US,
+                      classes=MODEL_MIX,
+                      weights=tuple(sorted(model_weights().items())))
+    fleet, rep = fleet_soak(MODEL_SEED, cfg, cache=cache)
+    total = rep["served"] + rep["rejected"] + rep["failed"]
+    assert rep["offered"] == MODEL_REQUESTS and total == rep["offered"], (
+        f"model fleet lost requests: offered={rep['offered']} "
+        f"served+rejected+failed={total}")
+    names = {a.name: l
+             for l, a in model_classes(Engine(cache=cache),
+                                       cfg.length).items()}
+    checked = mismatches = 0
+    for w in fleet.workers:
+        for tk in w.serve.served:
+            wc = MODEL_CLASSES[names[tk.artifact.name]]
+            want = wc.oracle(**tk.inputs)
+            ok = all(np.array_equal(
+                np.ravel(np.asarray(tk.outputs[f"out{i}"])),
+                np.ravel(np.asarray(wv))) for i, wv in enumerate(want))
+            checked += 1
+            mismatches += 0 if ok else 1
+    assert mismatches == 0 and checked == rep["served"], (
+        f"model fleet oracle divergence: {mismatches} mismatches over "
+        f"{checked}/{rep['served']} served")
+    fleet2, rep2 = fleet_soak(MODEL_SEED, cfg,
+                              cache=ArtifactCache(memory_only=True))
+    assert rep2["trace_digest"] == rep["trace_digest"], (
+        "model fleet replay diverged")
+    assert fleet2.results_digest() == fleet.results_digest()
+    return {
+        "seed": MODEL_SEED,
+        "requests": MODEL_REQUESTS,
+        "rate_per_us": MODEL_RATE_PER_US,
+        "fabrics": 2,
+        "classes": sorted(MODEL_MIX),
+        "served": rep["served"],
+        "rejected": rep["rejected"],
+        "failed": rep["failed"],
+        "steals": rep["steals"],
+        "p99_us": rep["latency"]["p99_us"],
+        "oracle_checked": checked,
+        "oracle_mismatches": mismatches,
+        "placements": rep["placements"],
+        "trace_digest": rep["trace_digest"],
+        "replay_match": True,
+    }
+
+
 def main(json_path: str = "BENCH_fleet.json") -> dict:
     cache = ArtifactCache(memory_only=True)
     mean_us = calibrate(cache)
@@ -296,6 +365,14 @@ def main(json_path: str = "BENCH_fleet.json") -> dict:
           f"failed={drain['failed']} drained={drain['drained']}, "
           f"zero loss, zero duplicates, replay digest match: ok")
 
+    model = run_model_fleet(cache)
+    print(f"  model mix: {len(model['classes'])} transformer/SSM/MoE "
+          f"classes over {model['fabrics']} fabrics — "
+          f"served={model['served']} rejected={model['rejected']} "
+          f"steals={model['steals']} p99={model['p99_us']:.1f} us, "
+          f"oracle {model['oracle_checked']}/{model['oracle_mismatches']} "
+          f"(checked/mismatched), replay digest match: ok")
+
     out = {
         "bench": "fleet",
         "calibration": {"mean_service_us_4x4": mean_us},
@@ -304,6 +381,7 @@ def main(json_path: str = "BENCH_fleet.json") -> dict:
         "dse": dse_rows,
         "hetero": het,
         "fault_drain": drain,
+        "model": model,
     }
     if json_path:
         with open(json_path, "w") as f:

@@ -19,16 +19,25 @@ Everything is a pure function of the seed: the rows embed each run's
 ``trace_digest`` so two machines producing the same BENCH_serve.json can
 be diffed decision-for-decision.
 
-Backends: sim rows use the full class mix (short kernels, reduction,
-multi-shot plan, irregular loop); pallas rows drop the loop class (loop
-state is sim-only per the capability matrix) and use a smaller request
-count because interpret mode executes on the CPU interpreter. Timing
-columns are virtual-clock microseconds — modeled fabric cycles, not host
-wall time — so they are machine-independent on both backends.
+Mixes: ``--mix paper`` drives the paper's kernel classes, ``--mix model``
+the transformer/SSM/MoE layer classes of ``repro.workloads`` (realistic
+model-serving traffic). Model rows additionally re-verify **every served
+response against its class's jnp reference oracle** and report
+``oracle_match`` — the bench-level half of the workload differential gate
+(tests/test_workloads.py is the other half).
+
+Backends: sim rows serve every class; classes a backend cannot lower are
+dropped with named capability reasons by ``serve_classes`` (e.g. the
+irregular-loop and SSM-recurrence classes on pallas), and pallas rows use
+a smaller request count because interpret mode executes on the CPU
+interpreter. Timing columns are virtual-clock microseconds — modeled
+fabric cycles, not host wall time — so they are machine-independent on
+both backends.
 
 CLI::
 
     PYTHONPATH=src python -m benchmarks.bench_serve --requests 200
+    PYTHONPATH=src python -m benchmarks.bench_serve --mix model
 """
 from __future__ import annotations
 
@@ -53,66 +62,108 @@ def _fresh_engine(backend: str) -> Engine:
     return Engine(backend=backend, cache=ArtifactCache(memory_only=True))
 
 
+def _mix_weights(mix: str) -> Optional[Dict[str, float]]:
+    """The class-mix bias: model traffic uses the registry's arrival
+    weights (transformer-block-heavy); the paper mix stays uniform."""
+    if mix == "model":
+        from repro.workloads import model_weights
+        return model_weights()
+    return None
+
+
 def calibrate(backend: str, length: int,
-              include_loops: bool) -> Tuple[float, Dict[str, object]]:
+              include_loops: Optional[bool] = None,
+              mix: str = "paper") -> Tuple[float, Dict[str, object]]:
     """Mean modeled service time (us/request) of the class mix, measured
     by one naive dispatch per class on a throwaway engine."""
     eng = _fresh_engine(backend)
-    classes = serve_classes(eng, length, include_loops=include_loops)
+    classes = serve_classes(eng, length, include_loops=include_loops,
+                            mix=mix)
     rng = np.random.default_rng(0)
     before = eng.tally.total
-    for art in classes.values():
-        eng.run(art, request_inputs(art, length, rng))
+    for label, art in classes.items():
+        eng.run(art, request_inputs(art, length, rng, label=label))
     cycles = eng.tally.total - before
     cfg = ServeConfig()
     return (cycles / len(classes)) * cfg.us_per_cycle, classes
+
+
+def verify_model_outputs(serve: ServeEngine,
+                         classes: Dict[str, object]) -> Tuple[int, int]:
+    """Re-verify every served model-class response against its registered
+    jnp oracle; returns ``(checked, mismatches)``. The bench-level
+    differential assertion of the workload bridge: what the serving loop
+    returned under batching/preemption must be bit-exact with the
+    reference closure, per class, per request."""
+    from repro.workloads import MODEL_CLASSES
+    by_name = {a.name: l for l, a in classes.items()}
+    checked = mismatches = 0
+    for tk in serve.served:
+        wc = MODEL_CLASSES.get(by_name.get(tk.artifact.name, ""))
+        if wc is None:
+            continue
+        checked += 1
+        want = wc.oracle(**tk.inputs)
+        for i, w in enumerate(want):
+            got = np.ravel(np.asarray(tk.outputs[f"out{i}"]))
+            if not np.array_equal(got, np.ravel(w)):
+                mismatches += 1
+                break
+    return checked, mismatches
 
 
 def soak(seed: int, n_requests: int, length: int = 64,
          backend: str = "sim", rate_per_us: Optional[float] = None,
          config: Optional[ServeConfig] = None,
          include_loops: Optional[bool] = None,
-         bursty: bool = False) -> Tuple[ServeEngine, Dict]:
+         bursty: bool = False, mix: str = "paper"
+         ) -> Tuple[ServeEngine, Dict]:
     """One deterministic serve run: seeded workload -> drive -> report.
 
     The single entry point shared by this benchmark, the perf_smoke serve
     gate, and tests/test_serve.py's cross-process replay check — same
     (seed, args) means bit-identical trace and results everywhere.
-    Returns ``(serve_engine, report)``."""
-    if include_loops is None:
-        include_loops = backend == "sim"
+    Returns ``(serve_engine, report)``; model-mix reports carry the
+    oracle re-verification tally (``oracle_checked`` / ``oracle_
+    mismatches``)."""
     engine = _fresh_engine(backend)
-    classes = serve_classes(engine, length, include_loops=include_loops)
+    classes = serve_classes(engine, length, include_loops=include_loops,
+                            mix=mix)
     cfg = config or ServeConfig()
     rng = np.random.default_rng(seed)
     if rate_per_us is None:
-        mean_us, _ = calibrate(backend, length, include_loops)
+        mean_us, _ = calibrate(backend, length, include_loops, mix=mix)
         rate_per_us = 1.0 / mean_us
     if bursty:
         times = bursty_arrival_times(rng, n_requests, burst_size=16,
                                      gap_us=8.0 / rate_per_us)
     else:
         times = poisson_arrival_times(rng, n_requests, rate_per_us)
-    reqs = make_requests(classes, times, length, rng)
+    reqs = make_requests(classes, times, length, rng,
+                         weights=_mix_weights(mix))
     serve = ServeEngine(engine, cfg)
     report = serve.drive(reqs)
     report["results_digest"] = serve.results_digest()
+    if mix != "paper":
+        checked, bad = verify_model_outputs(serve, classes)
+        report["oracle_checked"] = checked
+        report["oracle_mismatches"] = bad
     return serve, report
 
 
 def run(length: int = 64, n_requests: int = 200, backend: str = "sim",
-        seed: int = 0, loads: Tuple[float, ...] = LOAD_POINTS
-        ) -> List[dict]:
-    include_loops = backend == "sim"
-    mean_us, classes = calibrate(backend, length, include_loops)
+        seed: int = 0, loads: Tuple[float, ...] = LOAD_POINTS,
+        mix: str = "paper") -> List[dict]:
+    mean_us, classes = calibrate(backend, length, mix=mix)
     rows: List[dict] = []
     for load in loads:
         rate = load / mean_us
         _, rep = soak(seed, n_requests, length=length, backend=backend,
-                      rate_per_us=rate, include_loops=include_loops)
+                      rate_per_us=rate, mix=mix)
         lat = rep["latency"]
         rows.append({
             "backend": backend,
+            "mix": mix,
             "length": length,
             "requests": n_requests,
             "seed": seed,
@@ -144,6 +195,18 @@ def run(length: int = 64, n_requests: int = 200, backend: str = "sim",
             "trace_digest": rep["trace_digest"],
             "results_digest": rep["results_digest"],
         })
+        if mix != "paper":
+            # the workload differential gate, bench half: every served
+            # model-layer response was re-checked against its jnp oracle
+            rows[-1]["oracle_checked"] = rep["oracle_checked"]
+            rows[-1]["oracle_match"] = rep["oracle_mismatches"] == 0
+            assert rep["oracle_mismatches"] == 0, (
+                f"{backend}/{mix}: {rep['oracle_mismatches']} of "
+                f"{rep['oracle_checked']} served responses diverged from "
+                f"the jnp oracle at load {load}x")
+            assert rep["oracle_checked"] == rep["served"], (
+                f"{backend}/{mix}: oracle covered "
+                f"{rep['oracle_checked']} of {rep['served']} served")
     # the acceptance claim: under the heaviest traffic, continuous
     # batching pays strictly fewer config cycles than per-request dispatch
     top = rows[-1]
@@ -163,30 +226,37 @@ def write_json(rows: List[dict], path: str = "BENCH_serve.json") -> str:
 
 def main(length: int = 64, n_requests: int = 200,
          pallas_requests: int = 48, json_path: str = "BENCH_serve.json",
-         seed: int = 0, backends: Tuple[str, ...] = ("sim", "pallas")
-         ) -> List[dict]:
+         seed: int = 0, backends: Tuple[str, ...] = ("sim", "pallas"),
+         mixes: Tuple[str, ...] = ("paper",)) -> List[dict]:
     rows: List[dict] = []
-    for backend in backends:
-        n = n_requests if backend == "sim" else pallas_requests
-        note = " [interpret mode; loop class excluded per capability " \
-               "matrix]" if backend == "pallas" else ""
-        print(f"  backend={backend}, {n} requests{note} (latencies are "
-              f"virtual-clock us — modeled cycles, machine-independent)")
-        brows = run(length=length, n_requests=n, backend=backend, seed=seed)
-        print(f"  {'load':>5s} {'offer rps':>10s} {'wall rps':>10s} "
-              f"{'steady rps':>10s} {'p50 us':>8s} {'p99 us':>8s} "
-              f"{'srv':>4s} {'rej':>4s} {'pre':>4s} {'cfg paid':>9s} "
-              f"{'cfg naive':>9s}")
-        for r in brows:
-            steady = r["steady_throughput_rps"]
-            print(f"  {r['offered_load']:5.2f} {r['offered_rps']:10.0f} "
-                  f"{r['throughput_rps']:10.0f} "
-                  f"{steady if steady is None else round(steady):>10} "
-                  f"{r['p50_us']:8.1f} "
-                  f"{r['p99_us']:8.1f} {r['served']:4d} {r['rejected']:4d} "
-                  f"{r['preemptions']:4d} {r['config_cycles_paid']:9d} "
-                  f"{r['config_cycles_naive']:9d}")
-        rows.extend(brows)
+    for mix in mixes:
+        for backend in backends:
+            n = n_requests if backend == "sim" else pallas_requests
+            note = " [interpret mode; capability-ineligible classes " \
+                   "dropped]" if backend == "pallas" else ""
+            print(f"  mix={mix}, backend={backend}, {n} requests{note} "
+                  f"(latencies are virtual-clock us — modeled cycles, "
+                  f"machine-independent)")
+            brows = run(length=length, n_requests=n, backend=backend,
+                        seed=seed, mix=mix)
+            print(f"  {'load':>5s} {'offer rps':>10s} {'wall rps':>10s} "
+                  f"{'steady rps':>10s} {'p50 us':>8s} {'p99 us':>8s} "
+                  f"{'srv':>4s} {'rej':>4s} {'pre':>4s} {'cfg paid':>9s} "
+                  f"{'cfg naive':>9s} {'oracle':>6s}")
+            for r in brows:
+                steady = r["steady_throughput_rps"]
+                oracle = {True: "ok", False: "FAIL"}.get(
+                    r.get("oracle_match"), "-")
+                print(f"  {r['offered_load']:5.2f} "
+                      f"{r['offered_rps']:10.0f} "
+                      f"{r['throughput_rps']:10.0f} "
+                      f"{steady if steady is None else round(steady):>10} "
+                      f"{r['p50_us']:8.1f} {r['p99_us']:8.1f} "
+                      f"{r['served']:4d} {r['rejected']:4d} "
+                      f"{r['preemptions']:4d} "
+                      f"{r['config_cycles_paid']:9d} "
+                      f"{r['config_cycles_naive']:9d} {oracle:>6s}")
+            rows.extend(brows)
     if json_path:
         print(f"  wrote {write_json(rows, json_path)}")
     return rows
@@ -203,9 +273,14 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", action="append", default=None,
                     choices=("sim", "pallas"))
+    ap.add_argument("--mix", action="append", default=None,
+                    choices=("paper", "model"),
+                    help="class mixes to drive (repeatable; default "
+                         "paper)")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="output path ('' disables)")
     args = ap.parse_args()
     main(length=args.length, n_requests=args.requests,
          pallas_requests=args.pallas_requests, json_path=args.json,
-         seed=args.seed, backends=tuple(args.backend or ("sim", "pallas")))
+         seed=args.seed, backends=tuple(args.backend or ("sim", "pallas")),
+         mixes=tuple(args.mix or ("paper",)))

@@ -20,6 +20,12 @@ The serve gate (ISSUE 8) replays a fixed-seed 200-request soak through
 are pinned exactly (the run is deterministic) and the p99 latency — in
 machine-independent virtual microseconds — must meet the pinned budget.
 
+The model-mix gate (ISSUE 10) replays the same kind of soak over the
+transformer/SSM/MoE workload classes of ``repro.workloads``: counts and
+the preemption tally are pinned exactly and every served response must
+re-verify bit-exactly against its ``jnp`` oracle — so a semantics drift
+in any model-layer kernel fails the build even if scheduling is intact.
+
 The fleet gate (ISSUE 9) does the same for the multi-fabric scheduler: a
 fixed-seed 3-fabric soak with one fabric scripted to die mid-run pins
 served/rejected/failed *and* the fault-drain tally exactly, plus a
@@ -181,6 +187,44 @@ def main(factor: float = 2.0, baseline_path: str = BASELINE_PATH) -> int:
             print(f"  serve p99 {p99:.1f} us > budget "
                   f"{sb['p99_budget_us']:.1f} us REGRESSED")
             failures.append(("serve", "p99_us", p99, sb["p99_budget_us"]))
+
+    # model-mix serve smoke (ISSUE 10): the same fixed-seed soak over the
+    # transformer/SSM/MoE workload classes. Counts AND the preemption
+    # tally are pinned exactly, and every served response must re-verify
+    # bit-exactly against its jnp oracle — a drift here means either the
+    # scheduler or a model-layer kernel's semantics changed.
+    mb = baseline.get("serve_model")
+    if mb is not None:
+        from benchmarks.bench_serve import soak as model_soak
+        _, mrep = model_soak(seed=mb["seed"], n_requests=mb["requests"],
+                             length=baseline["length"], backend="sim",
+                             rate_per_us=mb["rate_per_us"], mix="model")
+        mp99 = mrep["latency"]["p99_us"]
+        print(f"  model gate: seed={mb['seed']} requests={mb['requests']} "
+              f"rate={mb['rate_per_us']:g}/us -> served={mrep['served']} "
+              f"rejected={mrep['rejected']} failed={mrep['failed']} "
+              f"preemptions={mrep['preemptions']} "
+              f"oracle={mrep['oracle_checked']}/"
+              f"{mrep['oracle_mismatches']} p99={mp99:.1f} us "
+              f"(budget {mb['p99_budget_us']:.1f} virtual us)")
+        for field in ("served", "rejected", "failed", "preemptions"):
+            if mrep[field] != mb[field]:
+                print(f"  model {field} {mrep[field]} != pinned "
+                      f"{mb[field]} ACCOUNTING DRIFTED")
+                failures.append(("serve_model", field, mrep[field],
+                                 mb[field]))
+        if mrep["oracle_mismatches"] != 0 \
+                or mrep["oracle_checked"] != mrep["served"]:
+            print(f"  model oracle divergence: "
+                  f"{mrep['oracle_mismatches']} mismatches over "
+                  f"{mrep['oracle_checked']}/{mrep['served']} served")
+            failures.append(("serve_model", "oracle",
+                             mrep["oracle_mismatches"], 0))
+        if mp99 > mb["p99_budget_us"]:
+            print(f"  model p99 {mp99:.1f} us > budget "
+                  f"{mb['p99_budget_us']:.1f} us REGRESSED")
+            failures.append(("serve_model", "p99_us", mp99,
+                             mb["p99_budget_us"]))
 
     # fleet smoke (ISSUE 9): a fixed-seed multi-fabric soak with one
     # fabric scripted to die mid-run. Counts — including how many

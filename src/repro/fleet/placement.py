@@ -64,12 +64,15 @@ def measure_class_costs(geometry: Tuple[int, int, int, int],
     """
     from repro.core.fabric import Fabric
     from repro.engine.scheduler import Engine
-    from repro.serve.load import class_recipes, request_inputs
+    from repro.serve.load import (compile_recipe, mix_recipes,
+                                  request_inputs)
 
     rows, cols, n_imns, n_omns = geometry
     eng = Engine(Fabric(rows=rows, cols=cols, n_imns=n_imns,
                         n_omns=n_omns), backend=backend, cache=cache)
-    recipes = class_recipes(length)
+    # the full label namespace (paper + model-layer classes), so fleet
+    # configs can mix both without a second resolution path
+    recipes = mix_recipes(length, "all")
     costs: Dict[str, ClassCost] = {}
     artifacts: Dict[str, object] = {}
     rng = np.random.default_rng(0)     # fixed probe seed: the cost table
@@ -78,11 +81,10 @@ def measure_class_costs(geometry: Tuple[int, int, int, int],
         if label not in recipes:
             raise ValueError(f"unknown config class {label!r} "
                              f"(have {sorted(recipes)})")
-        fn, kw = recipes[label]
         try:
-            art = eng.compile(fn(), **kw)
+            art = compile_recipe(eng, label, length, recipes)
             before = eng.tally.total
-            eng.run(art, request_inputs(art, length, rng))
+            eng.run(art, request_inputs(art, length, rng, label=label))
             exec_cycles = eng.tally.total - before
         except Exception as e:
             costs[label] = ClassCost(

@@ -461,16 +461,17 @@ def fleet_workload(seed: int, config: FleetConfig, cache=None
     shape depends only on the DFG, which is geometry-independent), so the
     identical stream can be replayed through a single-engine oracle for
     digest comparison."""
-    from repro.serve.load import (bursty_arrival_times,
-                                  make_labeled_requests,
-                                  poisson_arrival_times, serve_classes)
+    from repro.serve.load import (bursty_arrival_times, compile_recipe,
+                                  make_labeled_requests, mix_recipes,
+                                  poisson_arrival_times)
     cache = cache if cache is not None else ArtifactCache(memory_only=True)
     ref = Engine(Fabric(), backend="sim", cache=cache)
-    classes = {l: a for l, a in serve_classes(ref, config.length).items()
-               if l in config.classes}
-    missing = [l for l in config.classes if l not in classes]
+    recipes = mix_recipes(config.length, "all")
+    missing = [l for l in config.classes if l not in recipes]
     if missing:
         raise ValueError(f"unknown config class(es) {missing}")
+    classes = {l: compile_recipe(ref, l, config.length, recipes)
+               for l in config.classes}
     rng = np.random.default_rng(seed)
     if config.bursty:
         times = bursty_arrival_times(

@@ -20,9 +20,11 @@ requests.
 """
 from repro.serve.clock import VirtualClock, WallClock
 from repro.serve.health import LivenessProbe
-from repro.serve.load import (bursty_arrival_times, make_requests,
-                              poisson_arrival_times, request_inputs,
-                              serve_classes)
+from repro.serve.load import (artifact_skip_reason, bursty_arrival_times,
+                              compile_recipe, make_labeled_requests,
+                              make_requests, mix_recipes, model_classes,
+                              poisson_arrival_times, recipe_skip_reason,
+                              request_inputs, serve_classes)
 from repro.serve.loop import (AdmissionError, ServeConfig, ServeEngine,
                               Server, Ticket)
 from repro.serve.slo import SLOTracker
@@ -30,6 +32,8 @@ from repro.serve.slo import SLOTracker
 __all__ = [
     "AdmissionError", "LivenessProbe", "Server", "ServeConfig",
     "ServeEngine", "SLOTracker", "Ticket", "VirtualClock", "WallClock",
-    "bursty_arrival_times", "make_requests", "poisson_arrival_times",
+    "artifact_skip_reason", "bursty_arrival_times", "compile_recipe",
+    "make_labeled_requests", "make_requests", "mix_recipes",
+    "model_classes", "poisson_arrival_times", "recipe_skip_reason",
     "request_inputs", "serve_classes",
 ]

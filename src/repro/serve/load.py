@@ -12,10 +12,19 @@ Arrival processes:
     simultaneous requests separated by exponential quiet gaps), the
     adversarial case for admission control and batch-close deadlines.
 
-Workload construction: :func:`serve_classes` compiles the standard mixed
-request classes (short streaming kernels, a reduction, a multi-shot plan,
-an irregular loop) on a caller's engine; :func:`make_requests` assigns a
-seeded class choice + input streams to each arrival time.
+Workload construction: :func:`serve_classes` compiles a request-class mix
+on a caller's engine — the paper mix (short streaming kernels, a
+reduction, a multi-shot plan, an irregular loop), the model-layer mix
+(``mix="model"``, the transformer/SSM/MoE classes of ``repro.workloads``),
+or both (``mix="all"``); :func:`make_requests` assigns a seeded class
+choice + input streams to each arrival time.
+
+Backend eligibility has ONE source of truth: every mix flows through
+:func:`mix_recipes` + :func:`recipe_skip_reason` (which defers to
+``engine.capabilities.backend_skip_reason``), so a class that a backend
+cannot lower is dropped with a *named* reason everywhere — serve soaks,
+fleet placement, and the benchmarks can never silently disagree about
+which classes a backend serves.
 """
 from __future__ import annotations
 
@@ -23,6 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import dfg as D
 from repro.core import kernels_lib as K
 
 
@@ -77,28 +87,155 @@ def class_recipes(length: int, include_loops: bool = True,
     return recipes
 
 
-def serve_classes(engine, length: int, include_loops: bool = True,
-                  include_multishot: bool = True) -> Dict[str, object]:
-    """Compile the standard serve workload mix on ``engine``; returns
+def mix_recipes(length: int, mix: str = "paper",
+                include_loops: bool = True,
+                include_multishot: bool = True) -> Dict[str, tuple]:
+    """Uncompiled recipes of a named class mix — ``"paper"`` (the 6
+    standard classes above), ``"model"`` (the transformer/SSM/MoE layer
+    classes of ``repro.workloads``), or ``"all"`` (both; the namespace the
+    fleet resolves arbitrary ``FleetConfig.classes`` against).
+
+    A recipe factory returns either a ready :class:`~repro.core.dfg.DFG`
+    (paper classes) or a Python function for ``repro.frontend`` to trace
+    (model classes) — :func:`compile_recipe` dispatches on the result.
+    Lazy import: ``repro.workloads`` pulls in the jax tracer."""
+    if mix == "paper":
+        return class_recipes(length, include_loops=include_loops,
+                             include_multishot=include_multishot)
+    from repro.workloads import model_recipes
+    if mix == "model":
+        return model_recipes(length)
+    if mix == "all":
+        merged = class_recipes(length, include_loops=include_loops,
+                               include_multishot=include_multishot)
+        models = model_recipes(length)
+        clash = sorted(set(merged) & set(models))
+        if clash:
+            raise ValueError(f"model class labels collide with the paper "
+                             f"mix: {clash}")
+        merged.update(models)
+        return merged
+    raise ValueError(f"unknown mix {mix!r}; expected 'paper', 'model' "
+                     f"or 'all'")
+
+
+def compile_recipe(engine, label: str, length: int,
+                   recipes: Dict[str, tuple]):
+    """Compile one recipe on ``engine`` — a DFG-returning factory compiles
+    directly, a traced-function factory gets the stream ``length``."""
+    fn, kw = recipes[label]
+    obj = fn()
+    if isinstance(obj, D.DFG):
+        return engine.compile(obj, **kw)
+    return engine.compile(obj, length, **kw)
+
+
+# (mix, label, length, backend) -> named skip reason or None; tracing a
+# recipe to probe eligibility is cheap but not free, and soaks re-probe
+# the same mixes at every load point
+_SKIP_MEMO: Dict[tuple, Optional[str]] = {}
+
+
+def recipe_skip_reason(label: str, length: int, backend: str,
+                       recipes: Dict[str, tuple]) -> Optional[str]:
+    """The named reason ``backend`` cannot serve class ``label`` at
+    ``length`` (capability features joined with '+', per
+    ``engine.capabilities.backend_skip_reason``), or None when it must.
+    Probed on the uncompiled recipe — trace only, no place & route."""
+    if backend == "sim":
+        return None                 # the semantic reference takes the IR
+    key = (label, length, backend)
+    if key not in _SKIP_MEMO:
+        from repro.engine.capabilities import backend_skip_reason
+        fn, _ = recipes[label]
+        obj = fn()
+        if not isinstance(obj, D.DFG):
+            from repro.frontend import trace
+            obj = trace(obj, length)
+        _SKIP_MEMO[key] = backend_skip_reason(obj, length, backend)
+    return _SKIP_MEMO[key]
+
+
+def artifact_skip_reason(artifact, length: int,
+                         backend: str) -> Optional[str]:
+    """Post-compile twin of :func:`recipe_skip_reason`: the named reason
+    ``backend`` cannot run a compiled artifact (plan-level features, so
+    multi-shot partitioning is included), or None."""
+    from repro.engine.capabilities import (CapabilityError,
+                                           check_stream_length,
+                                           missing_features)
+    missing = missing_features(artifact.features, backend)
+    if missing:
+        return "+".join(missing)
+    if backend != "sim":
+        try:
+            for shot in artifact.plan.shots:
+                check_stream_length(shot.dfg, length, backend)
+        except CapabilityError:
+            return "segmented-reduction"
+    return None
+
+
+def serve_classes(engine, length: int,
+                  include_loops: Optional[bool] = None,
+                  include_multishot: bool = True, mix: str = "paper",
+                  skipped: Optional[Dict[str, str]] = None
+                  ) -> Dict[str, object]:
+    """Compile a workload mix on ``engine``; returns
     ``{label: CompiledArtifact}``.
 
-    The mix covers the scheduling shapes the paper's traffic story needs:
+    The paper mix covers the scheduling shapes the traffic story needs:
     short streaming kernels (relu/vadd/fft — the latency-sensitive class),
     a reduction (mac1), a multi-shot plan (axpby under ``pe_limit=1`` —
     the preemptible long request), and an irregular loop (div_loop,
-    data-dependent trip count). ``include_loops=False`` keeps the mix
-    inside the pallas capability set (loop state is sim-only)."""
-    return {label: engine.compile(fn(), **kw)
-            for label, (fn, kw) in class_recipes(
-                length, include_loops=include_loops,
-                include_multishot=include_multishot).items()}
+    data-dependent trip count). ``mix="model"`` compiles the
+    transformer/SSM/MoE layer classes of ``repro.workloads`` instead.
+
+    Classes the engine's backend cannot lower are dropped with a *named*
+    reason (collected into ``skipped`` when given) via
+    :func:`recipe_skip_reason` — capability routing lives here, once, so
+    callers never hand-maintain per-backend class lists.
+    ``include_loops`` remains as an explicit mix-narrowing override
+    (default None: keep every loop class the backend can serve)."""
+    recipes = mix_recipes(length, mix,
+                          include_loops=include_loops in (None, True),
+                          include_multishot=include_multishot)
+    classes: Dict[str, object] = {}
+    for label in recipes:
+        reason = recipe_skip_reason(label, length, engine.backend, recipes)
+        if reason is not None:
+            if skipped is not None:
+                skipped[label] = reason
+            continue
+        classes[label] = compile_recipe(engine, label, length, recipes)
+    return classes
 
 
-def request_inputs(artifact, length: int,
-                   rng: np.random.Generator) -> Dict[str, np.ndarray]:
-    """Seeded input streams for one request (recirculating kernels get the
-    positive operand range the loop semantics require — same convention as
-    benchmarks/bench_engine.py)."""
+def model_classes(engine, length: int,
+                  skipped: Optional[Dict[str, str]] = None
+                  ) -> Dict[str, object]:
+    """Compile the model-layer workload mix (``repro.workloads``) on
+    ``engine`` — the realistic-traffic sibling of :func:`serve_classes`.
+    Backend-ineligible classes are dropped with named reasons into
+    ``skipped`` (e.g. the SSM recurrences on pallas)."""
+    return serve_classes(engine, length, mix="model", skipped=skipped)
+
+
+def request_inputs(artifact, length: int, rng: np.random.Generator,
+                   label: Optional[str] = None) -> Dict[str, np.ndarray]:
+    """Seeded input streams for one request.
+
+    A model-layer class (``label`` in the ``repro.workloads`` registry)
+    draws from its registered per-stream ranges — fixed-point kernels need
+    operands inside their Q-format envelope for the int32-exact oracle
+    contract. Otherwise the generic convention applies (recirculating
+    kernels get the positive operand range the loop semantics require —
+    same as benchmarks/bench_engine.py)."""
+    if label is not None:
+        from repro.workloads import workload_input_gen
+        gen = workload_input_gen(label)
+        if gen is not None:
+            return gen(length, rng)
     g = artifact.dfg
     lo, hi = (1, 100) if g.has_recirculation() else (-64, 64)
     return {name: rng.integers(lo, hi, length).astype(np.int32)
@@ -131,7 +268,8 @@ def make_labeled_requests(classes: Dict[str, object],
     for t, k in zip(times, picks):
         label = labels[int(k)]
         reqs.append((float(t), label,
-                     request_inputs(classes[label], length, rng)))
+                     request_inputs(classes[label], length, rng,
+                                    label=label)))
     reqs.sort(key=lambda r: r[0])
     return reqs
 

@@ -1,0 +1,22 @@
+"""repro.workloads — real model-layer compute as STRELA request classes.
+
+The bridge between the seed's float model zoo (``repro.models``,
+``repro.kernels``) and the int32 streaming fabric: per-layer ops are
+decomposed into fixed-point streaming kernels (``workloads/kernels.py``),
+traced through ``repro.frontend``, and registered as
+:class:`~repro.workloads.registry.WorkloadClass` entries
+(``workloads/registry.py``) that ``repro.serve`` / ``repro.fleet`` ingest
+like any other config class.  See DESIGN.md §16.
+"""
+from repro.workloads.registry import (MODEL_CLASSES, MODEL_MIX,
+                                      WorkloadClass, model_recipes,
+                                      model_weights, workload_input_gen)
+
+__all__ = [
+    "MODEL_CLASSES",
+    "MODEL_MIX",
+    "WorkloadClass",
+    "model_recipes",
+    "model_weights",
+    "workload_input_gen",
+]

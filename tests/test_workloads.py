@@ -1,0 +1,322 @@
+"""repro.workloads tests (ISSUE 10): the model-layer workload bridge.
+
+  * **registry contract** — >= 6 model-layer classes spanning the
+    transformer / attention / SSM / MoE layers, at least one demand-gated
+    loop (data-dependent trip count via recirculation) and one multi-shot
+    plan; every registered input-stream name matches the traced DFG;
+  * **differential gate** — every WorkloadClass is bit-exact against its
+    independent ``jnp`` oracle across seeded inputs on every
+    capability-eligible backend (sim always; pallas unless the class's
+    registered ``pallas_skip`` names why not), plus a hypothesis property
+    over (class, length, seed);
+  * **capability coverage** — each class's expected pallas
+    ``backend_skip_reason`` is asserted by *name* (a known capability
+    feature, never a crash), at both recipe (pre-compile) and artifact
+    (post-compile plan) level — satellite 4;
+  * **one source of truth** — ``serve_classes``/``model_classes`` drop
+    backend-ineligible classes with those same named reasons, so backends
+    can never silently disagree about a mix — satellite 3 lock;
+  * **float semantics** — the fixed-point kernels stay within each
+    class's stated tolerance of the float layer op they quantize;
+  * **soak** — the model mix served end-to-end through ServeEngine and a
+    2-fabric FleetEngine under the virtual clock: accounting holds,
+    preemption hits a multi-shot model class, every served response
+    re-verifies against its oracle, and digests replay bit-identically
+    in-process and across OS processes — satellite 2.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_stub import given, settings, st
+
+from repro.engine import ArtifactCache, Engine
+from repro.engine.capabilities import FEATURE_DESC
+from repro.serve import (artifact_skip_reason, compile_recipe,
+                         model_classes, recipe_skip_reason, serve_classes)
+from repro.workloads import (MODEL_CLASSES, MODEL_MIX, model_recipes,
+                             model_weights, workload_input_gen)
+
+LENGTH = 32
+SEEDS = (0, 1, 2)
+
+# One shared in-memory artifact cache for the whole module: place & route
+# runs once per (class, geometry, backend) no matter how many tests touch
+# the class. Replay tests that must prove cold-start determinism build
+# their own engines/caches explicitly.
+_CACHE = ArtifactCache(memory_only=True)
+_ARTS = {}
+
+
+def _engine(backend="sim"):
+    return Engine(backend=backend, cache=_CACHE)
+
+
+def _artifact(label, backend="sim", length=LENGTH):
+    key = (label, backend, length)
+    if key not in _ARTS:
+        _ARTS[key] = compile_recipe(_engine(backend), label, length,
+                                    model_recipes(length))
+    return _ARTS[key]
+
+
+def _assert_oracle_exact(label, backend, seed, length=LENGTH):
+    wc = MODEL_CLASSES[label]
+    eng = _engine(backend)
+    art = _artifact(label, backend, length)
+    rng = np.random.default_rng(seed)
+    ins = wc.gen_inputs(length, rng)
+    out = eng.run(art, ins)
+    want = wc.oracle(**ins)
+    assert len(out) == len(want), (label, sorted(out), len(want))
+    for i, w in enumerate(want):
+        got = np.ravel(np.asarray(out[f"out{i}"]))
+        np.testing.assert_array_equal(
+            got, np.ravel(np.asarray(w)),
+            err_msg=f"{label}/{backend} seed={seed} out{i} diverged "
+                    f"from jnp oracle")
+
+
+# ---------------------------------------------------------------------------
+# registry contract
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_model_layers():
+    assert len(MODEL_CLASSES) >= 6
+    layers = {wc.layer for wc in MODEL_CLASSES.values()}
+    assert {"transformer", "attention", "ssm", "moe"} <= layers
+    assert MODEL_MIX == tuple(sorted(MODEL_CLASSES))
+    for label, wc in MODEL_CLASSES.items():
+        assert wc.label == label
+        assert wc.weight > 0
+        assert wc.description and wc.exactness
+    assert set(model_weights()) == set(MODEL_CLASSES)
+
+
+def test_mix_has_demand_gated_loop_and_multishot():
+    """The realism floor: at least one data-dependent-trip-count loop and
+    one multi-shot (preemptible) plan in the served mix."""
+    arts = {l: _artifact(l) for l in MODEL_CLASSES}
+    assert any(a.dfg.has_recirculation() for a in arts.values())
+    assert any(a.n_shots > 1 for a in arts.values())
+    assert arts["ssm_relax"].dfg.has_recirculation()
+    assert arts["swiglu_ms"].n_shots > 1
+
+
+@pytest.mark.parametrize("label", sorted(MODEL_CLASSES))
+def test_traced_inputs_match_registered_generator(label):
+    """The registry's input ranges feed the exact stream names the traced
+    DFG consumes, in the same declaration order (rng-replay contract)."""
+    wc = MODEL_CLASSES[label]
+    art = _artifact(label)
+    assert list(art.dfg.inputs) == list(wc.inputs)
+    gen = workload_input_gen(label)
+    assert gen is not None
+    a = gen(LENGTH, np.random.default_rng(3))
+    b = wc.gen_inputs(LENGTH, np.random.default_rng(3))
+    for name, (lo, hi) in wc.inputs.items():
+        np.testing.assert_array_equal(a[name], b[name])
+        assert a[name].dtype == np.int32
+        assert a[name].min() >= lo and a[name].max() < hi
+    assert workload_input_gen("relu") is None
+
+
+# ---------------------------------------------------------------------------
+# differential conformance gate (satellite 1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("label", sorted(MODEL_CLASSES))
+def test_oracle_exact_on_sim(label):
+    for seed in SEEDS:
+        _assert_oracle_exact(label, "sim", seed)
+
+
+@pytest.mark.parametrize("label", sorted(MODEL_CLASSES))
+def test_oracle_exact_on_pallas(label):
+    wc = MODEL_CLASSES[label]
+    if wc.pallas_skip is not None:
+        pytest.skip(f"pallas cannot lower {label}: {wc.pallas_skip}")
+    for seed in SEEDS[:2]:
+        _assert_oracle_exact(label, "pallas", seed)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.sampled_from(sorted(MODEL_CLASSES)),
+       st.sampled_from([16, 32, 64]),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_oracle_equivalence(label, length, seed):
+    """Property sweep: oracle equivalence is not an artifact of one
+    length or a lucky seed."""
+    _assert_oracle_exact(label, "sim", seed, length=length)
+
+
+@pytest.mark.parametrize("label", sorted(MODEL_CLASSES))
+def test_float_semantics_within_stated_tolerance(label):
+    """Each fixed-point kernel tracks the float layer op it quantizes
+    within the tolerance its ``exactness`` string states."""
+    wc = MODEL_CLASSES[label]
+    assert wc.float_ref is not None
+    eng = _engine()
+    art = _artifact(label)
+    for seed in SEEDS:
+        ins = wc.gen_inputs(LENGTH, np.random.default_rng(seed))
+        out = eng.run(art, ins)
+        # float_ref takes outputs by position (the oracle-tuple order)
+        outs = [np.ravel(np.asarray(out[f"out{i}"]))
+                for i in range(len(out))]
+        got, want, atol = wc.float_ref(ins, outs)
+        err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
+        assert err <= atol, (f"{label} seed={seed}: float deviation "
+                             f"{err:.4f} > stated atol {atol}")
+
+
+# ---------------------------------------------------------------------------
+# capability coverage (satellite 4) + one source of truth (satellite 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("label", sorted(MODEL_CLASSES))
+def test_expected_pallas_capability(label):
+    """Every class declares its pallas fate up front: either it runs
+    there (skip is None — enforced by the differential gate above) or
+    the skip reason is a '+'-join of *named* capability features, agreed
+    on by the recipe-level probe and the compiled artifact."""
+    wc = MODEL_CLASSES[label]
+    recipes = model_recipes(LENGTH)
+    reason = recipe_skip_reason(label, LENGTH, "pallas", recipes)
+    assert reason == wc.pallas_skip
+    assert artifact_skip_reason(_artifact(label), LENGTH,
+                                "pallas") == wc.pallas_skip
+    assert recipe_skip_reason(label, LENGTH, "sim", recipes) is None
+    if reason is not None:
+        for feature in reason.split("+"):
+            assert feature in FEATURE_DESC, (
+                f"{label}: skip reason component {feature!r} is not a "
+                f"named capability feature")
+
+
+def test_serve_classes_single_source_of_truth():
+    """Satellite 3: backend eligibility is derived from capabilities in
+    one place — ``serve_classes`` drops what a backend can't lower with
+    the registered named reason, identically for paper and model mixes
+    (no hand-maintained per-backend class lists anywhere)."""
+    expect_skip = {l: wc.pallas_skip for l, wc in MODEL_CLASSES.items()
+                   if wc.pallas_skip is not None}
+    skipped = {}
+    served = model_classes(_engine("pallas"), LENGTH, skipped=skipped)
+    assert skipped == expect_skip
+    assert set(served) == set(MODEL_CLASSES) - set(expect_skip)
+
+    assert set(model_classes(_engine(), LENGTH)) == set(MODEL_CLASSES)
+
+    skipped = {}
+    paper = serve_classes(_engine("pallas"), LENGTH, skipped=skipped)
+    assert "div_loop" in skipped and "div_loop" not in paper
+    for feature in skipped["div_loop"].split("+"):
+        assert feature in FEATURE_DESC
+
+
+# ---------------------------------------------------------------------------
+# serve / fleet soak over the model mix (satellite 2)
+# ---------------------------------------------------------------------------
+
+def _model_soak(seed=0, n=150):
+    from benchmarks.bench_serve import soak
+    return soak(seed=seed, n_requests=n, length=LENGTH, backend="sim",
+                rate_per_us=0.4, mix="model")
+
+
+def test_model_mix_serve_soak():
+    sv, rep = _model_soak()
+    assert rep["offered"] == 150
+    assert rep["offered"] == (rep["served"] + rep["rejected"] +
+                              rep["failed"])
+    assert rep["failed"] == 0
+    # every model class reached the fabric
+    assert len({tk.cls for tk in sv.served}) == len(MODEL_CLASSES)
+    # preemption was exercised by a multi-shot model class
+    assert rep["preemptions"] >= 1
+    assert any(tk.artifact.n_shots > 1 for tk in sv.served)
+    # every served response re-verified against its jnp oracle
+    assert rep["oracle_mismatches"] == 0
+    assert rep["oracle_checked"] == rep["served"]
+    # the fixed seed replays bit-identically in-process
+    sv2, rep2 = _model_soak()
+    assert rep["trace_digest"] == rep2["trace_digest"]
+    assert rep["results_digest"] == rep2["results_digest"]
+
+
+def _model_fleet(seed=11, n=60):
+    from repro.fleet import fleet_soak, homogeneous
+    cfg = homogeneous(2, n_requests=n, rate_per_us=0.3, length=LENGTH,
+                      classes=MODEL_MIX,
+                      weights=tuple(sorted(model_weights().items())))
+    return fleet_soak(seed, cfg, cache=ArtifactCache(memory_only=True))
+
+
+def test_model_mix_fleet_soak_two_fabrics():
+    fleet, rep = _model_fleet()
+    assert rep["offered"] == 60
+    assert rep["offered"] == (rep["served"] + rep["rejected"] +
+                              rep["failed"] + len(fleet.unroutable))
+    assert rep["failed"] == 0 and rep["unroutable"] == 0
+    # both fabrics took pins (class-affinity spread the model mix)
+    assert set(rep["placements"]) == set(MODEL_MIX)
+    assert len(set(rep["placements"].values())) == 2
+    # fleet-wide differential verification: every served response on
+    # every fabric matches its class's jnp oracle bit-exactly
+    names = {a.name: l
+             for l, a in model_classes(_engine(), LENGTH).items()}
+    checked = 0
+    for w in fleet.workers:
+        for tk in w.serve.served:
+            wc = MODEL_CLASSES[names[tk.artifact.name]]
+            want = wc.oracle(**tk.inputs)
+            for i, wv in enumerate(want):
+                np.testing.assert_array_equal(
+                    np.ravel(np.asarray(tk.outputs[f"out{i}"])),
+                    np.ravel(np.asarray(wv)),
+                    err_msg=f"fleet {w.name}/{tk.cls} rid={tk.rid}")
+            checked += 1
+    assert checked == rep["served"]
+    # bit-identical replay from a cold cache
+    fleet2, rep2 = _model_fleet()
+    assert rep["trace_digest"] == rep2["trace_digest"]
+    assert fleet.results_digest() == fleet2.results_digest()
+
+
+def test_model_soak_replays_across_processes():
+    """Same seed -> same serve and fleet digests in a separate OS
+    process: the model-layer classes keep the PR 8/9 replay contract."""
+    prog = (
+        "from benchmarks.bench_serve import soak; "
+        "from repro.engine import ArtifactCache; "
+        "from repro.fleet import fleet_soak, homogeneous; "
+        "from repro.workloads import MODEL_MIX, model_weights; "
+        "sv, rep = soak(seed=9, n_requests=40, length=32, backend='sim', "
+        "rate_per_us=0.4, mix='model'); "
+        "cfg = homogeneous(2, n_requests=30, rate_per_us=0.3, length=32, "
+        "classes=MODEL_MIX, "
+        "weights=tuple(sorted(model_weights().items()))); "
+        "fl, frep = fleet_soak(9, cfg, "
+        "cache=ArtifactCache(memory_only=True)); "
+        "assert rep['oracle_mismatches'] == 0, rep; "
+        "print(rep['trace_digest'], rep['results_digest'], "
+        "frep['trace_digest'], fl.results_digest())")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(root, "src"), root]),
+               STRELA_CACHE="0")
+    digests = set()
+    for _ in range(2):
+        out = subprocess.run([sys.executable, "-c", prog], cwd=root,
+                             env=env, capture_output=True, text=True,
+                             check=True)
+        digests.add(out.stdout.strip())
+    assert len(digests) == 1, f"cross-process replay diverged: {digests}"
